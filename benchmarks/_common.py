@@ -1,0 +1,84 @@
+"""Shared benchmark infra: timing, dataset cache, CSV emission.
+
+Numbers here are REAL wall-clock measurements of the JAX index structures
+on this host (relative comparisons across structures; the paper's absolute
+ns/lookup are Xeon numbers and ours is a batched-throughput regime — see
+DESIGN.md §7 change-log)."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+N_KEYS = int(os.environ.get("SOSD_N", 400_000))
+N_QUERIES = int(os.environ.get("SOSD_Q", 100_000))
+REPEATS = int(os.environ.get("SOSD_REPEATS", 3))
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str, n: int = N_KEYS, seed: int = 1):
+    from repro.data import sosd
+
+    return sosd.generate(name, n, seed=seed)
+
+
+@functools.lru_cache(maxsize=None)
+def queries(name: str, m: int = N_QUERIES, seed: int = 2):
+    from repro.data import sosd
+
+    return sosd.make_queries(dataset(name), m, seed=seed, present_frac=0.8)
+
+
+def time_lookup(fn: Callable, *args, repeats: int = REPEATS) -> float:
+    """Best-of-k wall time of a jitted callable, seconds."""
+    import jax
+
+    out = fn(*args)  # compile + warm
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def full_lookup_fn(build, data_jnp, last_mile: str = "binary"):
+    """jit'd end-to-end lookup: index bounds + last-mile search."""
+    import jax
+    from repro.core import search
+
+    max_err = build.meta["max_err"]
+    lookup = build.lookup
+    state = build.state
+    fn = search.SEARCH_FNS[last_mile]
+
+    @jax.jit
+    def run(q):
+        lo, hi = lookup(state, q)
+        return fn(data_jnp, q, lo, hi, max_err)
+
+    return run
+
+
+def emit(rows, header=None, path=None):
+    lines = []
+    if header:
+        lines.append(",".join(header))
+    for r in rows:
+        lines.append(",".join(str(x) for x in r))
+    text = "\n".join(lines)
+    print(text, flush=True)
+    if path:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text + "\n")
+    return text
+
+
+def ns_per_lookup(seconds: float, m: int) -> float:
+    return seconds / m * 1e9

@@ -1,0 +1,59 @@
+"""Paper Fig. 14/15 analogue: caching & pipelining sensitivity.
+
+CPU version: warm-vs-cold cache and memory fences.  TPU/JAX version: the
+same effects appear as (a) query-batch amortization — a tight loop of tiny
+dispatches vs one fused batch (dispatch+DMA latency is the 'memory round
+trip'), and (b) forced synchronization between lookups (block_until_ready
+per sub-batch = the memory-fence analogue: no overlap between lookups).
+Expectation mirroring the paper: the FASTEST structures lose the most from
+forced synchronization (their compute no longer hides dispatch latency).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks import _common as C
+
+
+def run(ds="amzn", out_dir="benchmarks/results"):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import base
+
+    keys = C.dataset(ds)
+    q = C.queries(ds)
+    data_jnp = jnp.asarray(keys)
+    rows = []
+    for name, hyper in [("rmi", dict(branching=4096)),
+                        ("pgm", dict(eps=64)),
+                        ("radix_spline", dict(eps=32, radix_bits=16)),
+                        ("btree", dict(sample=8)),
+                        ("rbs", dict(radix_bits=16))]:
+        b = base.REGISTRY[name](keys, **hyper)
+        fn = C.full_lookup_fn(b, data_jnp)
+        q_jnp = jnp.asarray(q)
+        fused = C.time_lookup(fn, q_jnp)
+        # "fenced": 64 sub-batches, each synchronized before the next
+        sub = np.array_split(q, 64)
+        subs = [jnp.asarray(s) for s in sub]
+        fn(subs[0])  # compile for the sub-shape
+        jax.block_until_ready(fn(subs[0]))
+        t0 = time.perf_counter()
+        for s in subs:
+            jax.block_until_ready(fn(s))
+        fenced = time.perf_counter() - t0
+        rows.append([ds, name,
+                     round(C.ns_per_lookup(fused, len(q)), 2),
+                     round(C.ns_per_lookup(fenced, len(q)), 2),
+                     round(fenced / fused, 2)])
+    C.emit(rows, header=["dataset", "index", "ns_fused", "ns_fenced",
+                         "slowdown"],
+           path=os.path.join(out_dir, "batching_effects.csv"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

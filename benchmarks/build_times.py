@@ -1,0 +1,38 @@
+"""Paper Fig. 17: single-threaded build times across dataset sizes.
+
+Paper claims to reproduce: RS fastest learned build (one pass), PGM next,
+RMI slowest; btree-style (sampled array) cheapest of all.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks import _common as C
+
+
+def run(sizes=(100_000, 400_000), ds="amzn", out_dir="benchmarks/results"):
+    from repro.core import base
+    from repro.data import sosd
+
+    configs = [("rmi", dict(branching=4096)),
+               ("pgm", dict(eps=64)),
+               ("radix_spline", dict(eps=32, radix_bits=16)),
+               ("btree", dict(sample=8)),
+               ("rbs", dict(radix_bits=16)),
+               ("robin_hash", dict(load_factor=0.5))]
+    rows = []
+    for n in sizes:
+        keys = sosd.generate(ds, n, seed=1)
+        for name, hyper in configs:
+            t0 = time.perf_counter()
+            base.REGISTRY[name](keys, **hyper)
+            t1 = time.perf_counter()
+            rows.append([ds, n, name, round(t1 - t0, 4)])
+    C.emit(rows, header=["dataset", "n_keys", "index", "build_seconds"],
+           path=os.path.join(out_dir, "build_times.csv"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Fig. 12/13 + §4.3: explanatory analysis.
+
+Regression of measured lookup latency on the TPU-era counter analogues
+(bytes_touched, probes, flops — DESIGN.md §7) plus size/log2_err; the
+paper's claims to reproduce: (a) no single metric explains performance,
+(b) the data-movement metric has the largest explanatory power,
+(c) size and log2_err are subsumed by the movement/probe metrics.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks import _common as C
+
+
+def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results"):
+    import jax.numpy as jnp
+    from repro.core import analysis, base, tuning
+
+    records = []
+    for ds in datasets:
+        keys = C.dataset(ds)
+        q = C.queries(ds)
+        data_jnp, q_jnp = jnp.asarray(keys), jnp.asarray(q)
+        lb = np.searchsorted(keys, q)
+        for build in tuning.sweep(keys, names=("rmi", "pgm", "radix_spline",
+                                               "btree", "rbs"),
+                                  max_configs=5):
+            lo, hi = build.lookup(build.state, q_jnp)
+            widths = np.maximum(np.asarray(hi) - np.asarray(lo) + 1, 1)
+            fn = C.full_lookup_fn(build, data_jnp)
+            secs = C.time_lookup(fn, q_jnp)
+            rec = analysis.describe(build, widths)
+            rec["dataset"] = ds
+            rec["ns_per_lookup"] = C.ns_per_lookup(secs, len(q))
+            records.append(rec)
+
+    rows = [[r["dataset"], r["name"], r["size_bytes"],
+             round(r["log2_err"], 2), r["probes"], r["bytes_touched"],
+             r["flops"], round(r["ns_per_lookup"], 1)] for r in records]
+    C.emit(rows, header=["dataset", "index", "size_bytes", "log2_err",
+                         "probes", "bytes_touched", "flops", "ns_per_lookup"],
+           path=os.path.join(out_dir, "explain.csv"))
+
+    multi = analysis.regress(records)
+    singles = analysis.single_metric_r2(records)
+    with_size = analysis.regress(
+        records, x_keys=("bytes_touched", "probes", "flops",
+                         "size_bytes", "log2_err"))
+    summary = {
+        "multi_metric_r2": round(multi["r2"], 3),
+        "multi_coefs": {k: round(v, 3) for k, v in multi["coef"].items()},
+        "single_metric_r2": {k: round(v, 3) for k, v in singles.items()},
+        "plus_size_log2err_r2": round(with_size["r2"], 3),
+        "n_points": multi["n"],
+    }
+    print("explain summary:", summary, flush=True)
+    return records, summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,214 @@
+"""Trip-count-aware cost attribution over compiled (post-SPMD) HLO text.
+
+Motivation (measured, see EXPERIMENTS.md §Dry-run): XLA:CPU's
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so any model
+compiled with scan-over-layers under-reports FLOPs by ~L and hides remat
+recompute entirely.  The compiled HLO text, however, contains everything
+needed to do it right:
+
+  * every computation body, with result/operand shapes per instruction,
+  * ``while`` ops carrying ``backend_config={"known_trip_count":{"n":..}}``
+    and their ``body=%comp`` reference,
+  * fusion/call/conditional references.
+
+We parse the text, build the call graph, and propagate multipliers from
+ENTRY: dot FLOPs (2 * prod(output dims) * prod(contracting dims)) and
+collective wire bytes (max of operand/result bytes) are accumulated with
+while-trip multipliers.  Shapes in compiled HLO are per-device shard
+shapes, so every number is already per-device.
+
+Elementwise FLOPs are ignored (dot-dominated workloads; the roofline
+compute term is an MXU term).  This is the tool the §Roofline/§Perf tables
+are built from.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "token": 0,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)")
+_CALLEE = re.compile(r"(?:body|to_apply|calls)=(%?[\w.\-]+)")
+_COND_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.dot_flops = 0.0
+        self.coll_bytes: Dict[str, float] = {}
+        self.coll_counts: Dict[str, int] = {}
+        # (callee, multiplier) — multiplier is the while trip count
+        self.calls: List[Tuple[str, float]] = []
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    shapes: Dict[str, str] = {}
+
+    for raw in text.splitlines():
+        # computation header: "%name (args...) -> type {" at column 0
+        # (args may contain nested parens for tuple types)
+        if ((raw.startswith("%") or raw.startswith("ENTRY"))
+                and raw.rstrip().endswith("{") and "->" in raw):
+            nm = _COMP_NAME.match(raw)
+            name = nm.group(1).lstrip("%")
+            cur = Computation(name)
+            comps[name] = cur
+            shapes = {}
+            if raw.startswith("ENTRY"):
+                entry = name
+            # record non-tuple parameter shapes from the header signature
+            for pm in re.finditer(r"(%?[\w.\-]+):\s*([a-z0-9]+\[[0-9,]*\])",
+                                  raw):
+                shapes[pm.group(1).lstrip("%")] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(raw)
+        if not m:
+            continue
+        result_name = m.group(1).lstrip("%")
+        rhs = m.group(2)
+        # result type = leading type expression of rhs
+        tm = re.match(r"^((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))",
+                      rhs)
+        rtype = tm.group(1) if tm else ""
+        shapes[result_name] = rtype
+
+        # parameters declared inline:  %p = f32[..] parameter(0)
+        if " parameter(" in rhs or rhs.startswith("parameter("):
+            continue
+
+        opm = re.search(r"([a-z0-9\-]+)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+
+        if op == "dot":
+            out_dims = _first_shape_dims(rtype) or []
+            out_prod = 1
+            for d in out_dims:
+                out_prod *= d
+            lhs_name = None
+            am = re.search(r"dot\((%?[\w.\-]+)", rhs)
+            if am:
+                lhs_name = am.group(1).lstrip("%")
+            contract = 1
+            cm = _CONTRACT.search(rhs)
+            if cm and lhs_name and lhs_name in shapes:
+                lhs_dims = _first_shape_dims(shapes[lhs_name]) or []
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        contract *= lhs_dims[int(idx)]
+            cur.dot_flops += 2.0 * out_prod * contract
+        elif any(op.startswith(c) for c in _COLLECTIVES):
+            kind = next(c for c in _COLLECTIVES if op.startswith(c))
+            # wire bytes ~ max(result, operand) per-device bytes
+            operand_bytes = 0
+            args = re.search(r"\((.*)\)", rhs)
+            if args:
+                for an in re.findall(r"%?([\w.\-]+)", args.group(1)):
+                    if an in shapes:
+                        operand_bytes += _shape_bytes(shapes[an])
+            nbytes = max(_shape_bytes(rtype), operand_bytes)
+            cur.coll_bytes[kind] = cur.coll_bytes.get(kind, 0.0) + nbytes
+            cur.coll_counts[kind] = cur.coll_counts.get(kind, 0) + 1
+
+        if op == "while":
+            tc = _TRIP.search(rhs)
+            trip = float(tc.group(1)) if tc else 1.0
+            for cal in _CALLEE.findall(rhs):
+                cur.calls.append((cal.lstrip("%"), trip))
+        elif op == "conditional":
+            bm = _COND_BRANCHES.search(rhs)
+            if bm:
+                for cal in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                    cur.calls.append((cal, 1.0))
+        else:
+            for cal in _CALLEE.findall(rhs):
+                cur.calls.append((cal.lstrip("%"), 1.0))
+
+    return comps, entry
+
+
+def analyze(text: str) -> Dict:
+    """Returns trip-count-weighted per-device totals for the program."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    memo: Dict[str, Dict] = {}
+    active: set = set()
+
+    def visit(name: str) -> Dict:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in active:
+            return {"flops": 0.0, "coll": {}, "counts": {}}
+        active.add(name)
+        c = comps[name]
+        total = {"flops": c.dot_flops,
+                 "coll": dict(c.coll_bytes),
+                 "counts": dict(c.coll_counts)}
+        for callee, mult in c.calls:
+            sub = visit(callee)
+            total["flops"] += mult * sub["flops"]
+            for k, v in sub["coll"].items():
+                total["coll"][k] = total["coll"].get(k, 0.0) + mult * v
+            for k, v in sub["counts"].items():
+                total["counts"][k] = total["counts"].get(k, 0) + mult * v
+        active.discard(name)
+        memo[name] = total
+        return total
+
+    out = visit(entry)
+    out["coll_total"] = sum(out["coll"].values())
+    return out
+
+
+def main():
+    import sys
+
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze(f.read()), indent=1))
+
+
+if __name__ == "__main__":
+    main()

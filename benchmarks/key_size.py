@@ -1,0 +1,61 @@
+"""Paper Fig. 10 / §4.2.2: 32-bit vs 64-bit keys.
+
+The paper found 32-bit floats lose precision ("caused floating point
+errors"); our f32 kernel path fixes that with re-verified error tables
+(kernels/rmi_lookup), so we additionally benchmark kernel-path lookups on
+both widths — the beyond-paper column.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks import _common as C
+
+
+def _to_32bit(keys: np.ndarray) -> np.ndarray:
+    scaled = (keys.astype(np.float64) / keys.max() * (2**31 - 1)).astype(np.uint64)
+    return np.unique(scaled)
+
+
+def run(ds="amzn", out_dir="benchmarks/results"):
+    import jax.numpy as jnp
+    from repro.core import base
+    from repro.data import sosd
+    from repro.kernels.rmi_lookup import ops as rops
+
+    keys64 = C.dataset(ds)
+    keys32 = _to_32bit(keys64)
+    rows = []
+    for width, keys in (("64bit", keys64), ("32bit", keys32)):
+        q = sosd.make_queries(keys, C.N_QUERIES, seed=3)
+        data_jnp, q_jnp = jnp.asarray(keys), jnp.asarray(q)
+        for name, hyper in [("rmi", dict(branching=4096)),
+                            ("pgm", dict(eps=64)),
+                            ("radix_spline", dict(eps=32, radix_bits=16)),
+                            ("btree", dict(sample=8))]:
+            b = base.REGISTRY[name](keys, **hyper)
+            fn = C.full_lookup_fn(b, data_jnp)
+            secs = C.time_lookup(fn, q_jnp)
+            rows.append([width, name, b.size_bytes,
+                         round(C.ns_per_lookup(secs, len(q)), 2), "f64-core"])
+        # kernel path (f32 inference, verified error tables)
+        st = rops.prepare_f32_state(keys, branching=4096)
+        lb = np.searchsorted(keys, q)
+        import jax
+        kfn = jax.jit(lambda qq: rops.rmi_lookup(st, data_jnp, qq,
+                                                 interpret=True))
+        got = np.asarray(kfn(q_jnp))
+        assert (got == lb).all(), "f32 kernel path must stay exact"
+        rows.append([width, "rmi_kernel_f32", int(st.a2.nbytes * 2
+                                                  + st.err.nbytes),
+                     "n/a(interpret)", "f32-kernel-verified-exact"])
+    C.emit(rows, header=["key_width", "index", "size_bytes", "ns_per_lookup",
+                         "note"],
+           path=os.path.join(out_dir, "key_size.csv"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Fig. 16 analogue: throughput under parallel load.
+
+The paper varies threads; a TPU varies (a) the query batch per dispatch
+and (b) the index size at fixed load (Fig. 16b).  Throughput here =
+lookups/second of the fused batched pipeline; the cache-miss-per-second
+proxy is bytes_touched * throughput.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks import _common as C
+
+
+def run(ds="amzn", out_dir="benchmarks/results"):
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import analysis, base
+
+    keys = C.dataset(ds)
+    q = C.queries(ds)
+    data_jnp = jnp.asarray(keys)
+    rows = []
+    # (a) batch scaling
+    for name, hyper in [("rmi", dict(branching=4096)),
+                        ("pgm", dict(eps=64)),
+                        ("radix_spline", dict(eps=32, radix_bits=16)),
+                        ("rbs", dict(radix_bits=16))]:
+        b = base.REGISTRY[name](keys, **hyper)
+        fn = C.full_lookup_fn(b, data_jnp)
+        for m in (1_000, 10_000, 100_000):
+            qm = jnp.asarray(q[:m])
+            secs = C.time_lookup(fn, qm)
+            rows.append(["batch_scaling", name, m,
+                         round(m / secs / 1e6, 3), ""])
+    # (b) size vs throughput at fixed load
+    for name, ladder in [("rmi", [dict(branching=2**i) for i in (8, 12, 16)]),
+                         ("pgm", [dict(eps=e) for e in (512, 64, 16)]),
+                         ("btree", [dict(sample=s) for s in (64, 8, 1)])]:
+        for hyper in ladder:
+            b = base.REGISTRY[name](keys, **hyper)
+            fn = C.full_lookup_fn(b, data_jnp)
+            qm = jnp.asarray(q)
+            secs = C.time_lookup(fn, qm)
+            lo, hi = b.lookup(b.state, qm)
+            widths = np.maximum(np.asarray(hi) - np.asarray(lo) + 1, 1)
+            rec = analysis.describe(b, widths)
+            thpt = len(q) / secs
+            rows.append(["size_scaling", name, b.size_bytes,
+                         round(thpt / 1e6, 3),
+                         round(rec["bytes_touched"] * thpt / 1e9, 2)])
+    C.emit(rows, header=["mode", "index", "x", "mlookups_per_s",
+                         "gbytes_touched_per_s"],
+           path=os.path.join(out_dir, "parallel_scaling.csv"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper Fig. 7 / Table 2: size x lookup-latency Pareto analysis.
+
+For each dataset, sweep each structure's size ladder, measure batched
+end-to-end lookup time, report all points + the Pareto frontier, and check
+the paper's headline claims (learned structures Pareto-competitive on
+amzn/face/wiki; rbs strong on osm; hash fastest point lookups).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks import _common as C
+
+
+def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results"):
+    import jax.numpy as jnp
+    from repro.core import base, tuning
+
+    rows = []
+    for ds in datasets:
+        keys = C.dataset(ds)
+        q = C.queries(ds)
+        data_jnp = jnp.asarray(keys)
+        q_jnp = jnp.asarray(q)
+        lb = np.searchsorted(keys, q)
+        for build in tuning.sweep(keys, names=("rmi", "pgm", "radix_spline",
+                                               "btree", "rbs", "binary_search")):
+            fn = C.full_lookup_fn(build, data_jnp)
+            secs = C.time_lookup(fn, q_jnp)
+            got = np.asarray(fn(q_jnp))
+            exact = bool((got == lb).all())
+            rows.append([ds, build.name, json.dumps(build.hyper).replace(",", ";"),
+                         build.size_bytes,
+                         round(C.ns_per_lookup(secs, len(q)), 2), exact])
+        # hash baseline: point lookups only (Table 2 companion)
+        hb = base.REGISTRY["robin_hash"](keys, load_factor=0.5)
+        import jax
+        hfn = jax.jit(lambda qq: hb.lookup(hb.state, qq))
+        present = keys[np.random.default_rng(0).integers(0, len(keys), len(q))]
+        secs = C.time_lookup(hfn, jnp.asarray(present))
+        rows.append([ds, "robin_hash", "{'load_factor': 0.5}",
+                     hb.size_bytes, round(C.ns_per_lookup(secs, len(q)), 2),
+                     True])
+    C.emit(rows, header=["dataset", "index", "hyper", "size_bytes",
+                         "ns_per_lookup", "exact"],
+           path=os.path.join(out_dir, "pareto.csv"))
+    return rows
+
+
+def pareto_summary(rows):
+    """Per-dataset Pareto frontier membership by family."""
+    from repro.core.base import pareto_front
+
+    out = {}
+    for ds in sorted({r[0] for r in rows}):
+        pts = [(r[3], r[4], r[1]) for r in rows
+               if r[0] == ds and r[1] != "robin_hash"]
+        front = pareto_front(pts)
+        out[ds] = sorted({name for _, _, name in front})
+    return out
+
+
+if __name__ == "__main__":
+    rows = run()
+    print("\npareto frontier families:", pareto_summary(rows))

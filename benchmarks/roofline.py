@@ -1,0 +1,102 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod 16x16 mesh:
+
+  compute term    = dot_flops_per_device / PEAK_FLOPS_BF16
+  memory term     = hbm_bytes_per_device / HBM_BW
+  collective term = collective_bytes_per_device / (LINKS * ICI_BW)
+
+dot_flops and collective bytes come from the trip-count-aware HLO analyzer
+(benchmarks/hlo_cost.py) over the compiled per-device program.  The memory
+term uses per-device buffer capacity touched (args + outputs + temps, each
+counted once — a traffic LOWER bound; the CPU backend also upcasts some
+bf16 buffers to f32, so it is quoted as 'pessimistic capacity', see
+EXPERIMENTS.md §Dry-run caveats).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per device; the ratio
+MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ICI_LINKS = 4  # usable links per v5e chip (2D torus: 4 directions)
+
+
+def terms(rec, chips: int = 256):
+    flops = rec["dot_flops_per_device"]
+    coll = rec["collective_bytes_total"]
+    mem = rec["memory"]
+    hbm_bytes = (mem["argument_bytes"] + mem["output_bytes"]
+                 + mem["temp_bytes"])
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll / (ICI_LINKS * ICI_BW)
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    # model flops per device: fwd+bwd for train, fwd for prefill, per-token
+    # for decode
+    n_active = rec["active_params"]
+    tokens = rec["tokens"]
+    if rec["kind"] == "train":
+        model_flops = 6.0 * n_active * tokens / chips
+    elif rec["kind"] == "prefill":
+        model_flops = 2.0 * n_active * tokens / chips
+    else:  # decode: one token per sequence
+        model_flops = 2.0 * n_active * tokens / chips
+    ratio = model_flops / flops if flops else float("nan")
+    bound = max(t_compute, t_memory, t_coll)
+    # roofline fraction: useful-compute time / bound time
+    frac = (model_flops / PEAK_FLOPS_BF16) / bound if bound else 0.0
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": model_flops,
+        "useful_ratio": ratio,
+        "roofline_fraction": frac,
+    }
+
+
+def load(path="benchmarks/results/dryrun_single_pod.json"):
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(path="benchmarks/results/dryrun_single_pod.json", md=False):
+    rows = []
+    for rec in load(path):
+        if rec.get("status") != "ok":
+            rows.append([rec["arch"], rec["shape"], rec.get("status"),
+                         rec.get("reason", rec.get("error", ""))[:60],
+                         "", "", "", "", ""])
+            continue
+        t = terms(rec)
+        rows.append([
+            rec["arch"], rec["shape"], t["dominant"],
+            f"{t['t_compute_s']*1e3:.2f}", f"{t['t_memory_s']*1e3:.2f}",
+            f"{t['t_collective_s']*1e3:.2f}",
+            f"{t['useful_ratio']:.2f}", f"{t['roofline_fraction']:.3f}",
+            f"{rec['memory']['temp_bytes']/2**30:.1f}",
+        ])
+    header = ["arch", "shape", "dominant", "t_comp_ms", "t_mem_ms",
+              "t_coll_ms", "useful/hlo", "roofline_frac", "temp_GiB"]
+    if md:
+        out = ["| " + " | ".join(header) + " |",
+               "|" + "---|" * len(header)]
+        out += ["| " + " | ".join(str(c) for c in r) + " |" for r in rows]
+        return "\n".join(out)
+    out = [",".join(header)] + [",".join(str(c) for c in r) for r in rows]
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "benchmarks/results/dryrun_single_pod.json"
+    print(table(path, md="--md" in sys.argv))

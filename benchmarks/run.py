@@ -1,0 +1,57 @@
+"""Run every paper-table benchmark; print ``name,us_per_call,derived`` CSV.
+
+One line per benchmark module (aggregate timing) plus detailed CSVs under
+benchmarks/results/.  ``SOSD_N`` / ``SOSD_Q`` env vars scale the workload
+(defaults keep single-core CPU runtime reasonable).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+os.environ.setdefault("SOSD_N", "200000")
+os.environ.setdefault("SOSD_Q", "50000")
+
+
+def main() -> None:
+    from benchmarks import (batching_effects, build_times, explain, key_size,
+                            moe_dispatch, pareto, parallel_scaling, scaling,
+                            search_fn)
+
+    print("name,us_per_call,derived")
+    jobs = [
+        ("pareto_fig7", pareto.run, lambda rows: pareto.pareto_summary(rows)),
+        ("scaling_fig9", scaling.run, lambda rows: f"{len(rows)}pts"),
+        ("key_size_fig10", key_size.run, lambda rows: f"{len(rows)}pts"),
+        ("search_fn_fig11", search_fn.run, lambda rows: f"{len(rows)}pts"),
+        ("explain_fig12", lambda: explain.run()[1],
+         lambda s: f"R2={s['multi_metric_r2']}"),
+        ("batching_fig14_15", batching_effects.run,
+         lambda rows: f"max_slowdown={max(r[-1] for r in rows)}"),
+        ("parallel_fig16", parallel_scaling.run, lambda rows: f"{len(rows)}pts"),
+        ("build_times_fig17", build_times.run, lambda rows: f"{len(rows)}pts"),
+        ("moe_dispatch_technique", moe_dispatch.run,
+         lambda rows: "; ".join(f"{r[0]}:{r[2]}x" for r in rows
+                                if r[1] == "dense/sorted-flop-ratio")),
+    ]
+    for name, fn, derive in jobs:
+        t0 = time.perf_counter()
+        result = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        try:
+            derived = derive(result)
+        except Exception:  # noqa: BLE001
+            derived = "?"
+        print(f"{name},{us:.0f},{str(derived).replace(',', ';')}", flush=True)
+
+    # roofline table if the dry-run artifacts exist
+    path = "benchmarks/results/dryrun_single_pod.json"
+    if os.path.exists(path):
+        from benchmarks import roofline
+
+        print("\n== roofline (single pod 16x16) ==")
+        print(roofline.table(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig. 9: dataset-size scaling (logarithmic slowdown expected)."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks import _common as C
+
+
+def run(sizes=(100_000, 200_000, 400_000, 800_000), ds="amzn",
+        out_dir="benchmarks/results"):
+    import jax.numpy as jnp
+    from repro.core import base
+    from repro.data import sosd
+
+    configs = [("rmi", dict(branching=4096)),
+               ("pgm", dict(eps=64)),
+               ("radix_spline", dict(eps=32, radix_bits=16)),
+               ("btree", dict(sample=8)),
+               ("binary_search", dict())]
+    rows = []
+    for n in sizes:
+        keys = sosd.generate(ds, n, seed=1)
+        q = sosd.make_queries(keys, C.N_QUERIES, seed=2)
+        data_jnp, q_jnp = jnp.asarray(keys), jnp.asarray(q)
+        for name, hyper in configs:
+            b = base.REGISTRY[name](keys, **hyper)
+            fn = C.full_lookup_fn(b, data_jnp)
+            secs = C.time_lookup(fn, q_jnp)
+            rows.append([ds, n, name, b.size_bytes,
+                         round(C.ns_per_lookup(secs, len(q)), 2)])
+    C.emit(rows, header=["dataset", "n_keys", "index", "size_bytes",
+                         "ns_per_lookup"],
+           path=os.path.join(out_dir, "scaling.csv"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

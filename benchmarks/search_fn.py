@@ -1,0 +1,38 @@
+"""Paper Fig. 11 / §4.2.3: last-mile search functions.
+
+Expectation from the paper: binary beats (vector-)linear at these bound
+widths; interpolation helps on smooth data (amzn), not on osm.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks import _common as C
+
+
+def run(datasets=("amzn", "osm"), out_dir="benchmarks/results"):
+    import jax.numpy as jnp
+    from repro.core import base
+
+    rows = []
+    for ds in datasets:
+        keys = C.dataset(ds)
+        q = C.queries(ds)
+        data_jnp, q_jnp = jnp.asarray(keys), jnp.asarray(q)
+        for name, hyper in [("rmi", dict(branching=2048)),
+                            ("pgm", dict(eps=128)),
+                            ("radix_spline", dict(eps=64, radix_bits=14)),
+                            ("rbs", dict(radix_bits=14))]:
+            b = base.REGISTRY[name](keys, **hyper)
+            for lm in ("binary", "linear", "interpolation"):
+                fn = C.full_lookup_fn(b, data_jnp, last_mile=lm)
+                secs = C.time_lookup(fn, q_jnp)
+                rows.append([ds, name, lm,
+                             round(C.ns_per_lookup(secs, len(q)), 2)])
+    C.emit(rows, header=["dataset", "index", "last_mile", "ns_per_lookup"],
+           path=os.path.join(out_dir, "search_fn.csv"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,2 @@
+"""Assigned architecture configs.  ``get(name)`` / ``get_smoke(name)``."""
+from repro.configs.registry import ARCHS, SHAPES, get, get_smoke, SKIPS  # noqa: F401

@@ -1,0 +1,34 @@
+"""Learned index structures (the paper's contribution) as JAX modules.
+
+Implements the paper's §2 abstraction: an index over a sorted array ``D`` is a
+map ``I: key -> (lo, hi)`` whose bound always contains
+``LB(x) = lower_bound(x)``, followed by a last-mile search inside the bound.
+
+64-bit integer keys require float64 model math (the paper's own
+implementations "transform query keys to 64-bit floats"), so importing this
+package enables jax x64 mode.  The LM model/serving/launch packages never
+import ``repro.core`` — their dtype discipline (bf16/f32) is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.base import (  # noqa: E402
+    IndexBuild,
+    SearchBound,
+    lower_bound_oracle,
+    REGISTRY,
+    register,
+    get_index,
+)
+from repro.core import rmi, radix_spline, pgm, btree, rbs, hashmap  # noqa: E402,F401
+from repro.core import search, validate, tuning, analysis  # noqa: E402,F401
+
+__all__ = [
+    "IndexBuild",
+    "SearchBound",
+    "lower_bound_oracle",
+    "REGISTRY",
+    "register",
+    "get_index",
+]

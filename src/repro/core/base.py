@@ -1,0 +1,104 @@
+"""Common abstractions for index structures (paper §2).
+
+An index structure maps a lookup key to a search bound ``(lo, hi)`` that must
+contain ``LB(x)``, the smallest index i with ``D[i] >= x`` (C++
+``lower_bound`` semantics, matching the paper's formal definition).  ``hi`` is
+inclusive here: valid means ``lo <= LB(x) <= hi``.
+
+Every concrete index provides:
+
+  build(keys, **hyper) -> state        (numpy, host-side, one-time)
+  lookup(state, queries) -> (lo, hi)   (pure jnp, vectorized over queries)
+  size_bytes(state) -> int             (paper's "size" axis)
+
+``state`` is a pytree of jnp arrays so ``lookup`` jits/shards cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+SearchBound = Tuple[Array, Array]  # (lo, hi) int64 arrays, hi inclusive
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexBuild:
+    """A built index: state pytree + the functions that interpret it."""
+
+    name: str
+    state: Any
+    lookup: Callable[[Any, Array], SearchBound]
+    size_bytes: int
+    hyper: Dict[str, Any]
+    # Descriptive stats filled by analysis.describe(); None until then.
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Registry: name -> build function, used by tuning sweeps and benchmarks.
+# ---------------------------------------------------------------------------
+REGISTRY: Dict[str, Callable[..., IndexBuild]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_index(name: str) -> Callable[..., IndexBuild]:
+    return REGISTRY[name]
+
+
+# ---------------------------------------------------------------------------
+# Oracle + shared helpers
+# ---------------------------------------------------------------------------
+def lower_bound_oracle(keys: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """Ground-truth LB(x) (numpy, host side)."""
+    return np.searchsorted(keys, queries, side="left")
+
+
+def keys_to_f64(keys) -> Array:
+    """uint64 keys -> float64 model inputs (paper: 'transform query keys to
+    64-bit floats').  Precision loss above 2^53 is absorbed by error bounds:
+    builders compute their error terms against the SAME f64-rounded keys the
+    lookup path sees."""
+    return jnp.asarray(keys).astype(jnp.float64)
+
+
+def np_keys_to_f64(keys: np.ndarray) -> np.ndarray:
+    return keys.astype(np.float64)
+
+
+def clip_bound(lo, hi, n: int) -> SearchBound:
+    lo = jnp.clip(lo, 0, n).astype(jnp.int64)
+    hi = jnp.clip(hi, 0, n).astype(jnp.int64)
+    return lo, hi
+
+
+def nbytes(*arrays) -> int:
+    total = 0
+    for a in arrays:
+        a = np.asarray(a)
+        total += a.nbytes
+    return total
+
+
+def pareto_front(points):
+    """points: list of (size_bytes, latency_ns, tag). Returns the subset not
+    dominated by any other point (smaller size AND lower latency)."""
+    out = []
+    for p in points:
+        dominated = any(
+            (q[0] <= p[0] and q[1] < p[1]) or (q[0] < p[0] and q[1] <= p[1])
+            for q in points
+        )
+        if not dominated:
+            out.append(p)
+    return sorted(out)

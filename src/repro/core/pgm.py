@@ -1,0 +1,114 @@
+"""PGM index (paper §3.3, Ferragina & Vinciguerra [13]).
+
+Bottom-up recursion of error-bounded piecewise linear regressions: level 0
+covers the data with error <= eps; each higher level is a PLA over the
+anchor keys of the level below with error <= eps_internal, until a level
+fits under ``top_cutoff`` segments (searched with one vector rank count).
+
+Lookup descends: at each level the PLA predicts the position of the query's
+segment in the level below within a static window, and a vectorized
+upper-bound search inside the window pins the exact segment.
+
+Validity note: the cone guarantees |pred - rank| <= eps only at FIT points;
+a query just below a segment boundary can see extra overshoot (the violator
+point that closed the segment is not covered by the segment's model).  We
+therefore compute each level's TRUE worst-case error at build time — every
+fit point evaluated under its own segment AND (for segment-opening points)
+under the previous segment — and use that (+1 for inter-key gaps, see
+DESIGN.md §2) as the static window.  eps keeps its paper role: it controls
+segmentation granularity; the verified window is what makes lookups valid
+for every integer query.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import base, _pla, search
+
+
+def _level_error(ax, ay, sl, xs, ys) -> int:
+    """Worst |pred - rank| of a PLA level over its own fit points, including
+    each segment-opening point evaluated under the PREVIOUS segment (the
+    overshoot a query approaching the boundary from below can see)."""
+    seg = np.clip(np.searchsorted(ax, xs, side="right") - 1, 0, len(ax) - 1)
+    pred = ay[seg] + sl[seg] * (xs - ax[seg])
+    err = np.abs(pred - ys).max()
+    opener = (xs == ax[seg]) & (seg > 0)
+    if opener.any():
+        sprev = seg[opener] - 1
+        pred_b = ay[sprev] + sl[sprev] * (xs[opener] - ax[sprev])
+        err = max(err, np.abs(pred_b - ys[opener]).max())
+    return int(np.ceil(err))
+
+
+@base.register("pgm")
+def build(
+    keys: np.ndarray,
+    eps: int = 64,
+    eps_internal: int = 8,
+    top_cutoff: int = 64,
+    last_mile: str = "binary",
+) -> base.IndexBuild:
+    keys = np.asarray(keys)
+    n = len(keys)
+    x = base.np_keys_to_f64(keys)
+    y = np.arange(n, dtype=np.float64)
+    xu, y_first, span = _pla.group_rounded(x, y)
+
+    levels = []  # bottom -> top: (anchor_x, anchor_y, slope, verified_err)
+    ax, ay, sl = _pla.shrinking_cone(xu, y_first, float(eps))
+    levels.append((ax, ay, sl, _level_error(ax, ay, sl, xu, y_first)))
+    while len(levels[-1][0]) > top_cutoff:
+        lx = levels[-1][0]
+        ly = np.arange(len(lx), dtype=np.float64)
+        a2, y2, s2 = _pla.shrinking_cone(lx, ly, float(eps_internal))
+        levels.append((a2, y2, s2, _level_error(a2, y2, s2, lx, ly)))
+
+    jl = [(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)) for (a, b, c, _) in levels]
+    errs = [e + 1 for (_, _, _, e) in levels]  # +1: inter-key gap safety
+    state = {"levels": jl}
+    size = sum(base.nbytes(a, b, c) for (a, b, c, _) in levels)
+    n_top = len(levels[-1][0])
+    depth = len(levels)
+    e0 = errs[0] + span
+    max_err = 2 * e0 + 2
+
+    def lookup(state, q) -> base.SearchBound:
+        qf = q.astype(jnp.float64)
+        lv = state["levels"]
+        # top level: one vector rank count over <= top_cutoff anchors
+        top_x = lv[-1][0]
+        seg = jnp.sum(top_x[None, :] <= qf[:, None], axis=-1).astype(jnp.int64) - 1
+        seg = jnp.clip(seg, 0, n_top - 1)
+        # descend
+        for lvl in range(depth - 1, 0, -1):
+            axl, ayl, sll = lv[lvl]
+            e = errs[lvl]
+            pred = jnp.take(ayl, seg) + jnp.take(sll, seg) * (qf - jnp.take(axl, seg))
+            below_x = lv[lvl - 1][0]
+            m = below_x.shape[0]
+            pred = jnp.clip(pred, -1.0, float(m) + 1.0)  # guard int overflow
+            lo = jnp.clip(jnp.floor(pred).astype(jnp.int64) - e, 0, m - 1)
+            hi = jnp.clip(jnp.ceil(pred).astype(jnp.int64) + e, 0, m - 1)
+            # segment = last anchor <= q  (upper_bound - 1)
+            ub = search.bounded_binary(below_x, qf, lo, hi, 2 * e + 3, side="right")
+            seg = jnp.clip(ub - 1, 0, m - 1)
+        # level 0 predicts the data position
+        ax0, ay0, sl0 = lv[0]
+        pred = jnp.take(ay0, seg) + jnp.take(sl0, seg) * (qf - jnp.take(ax0, seg))
+        pred = jnp.clip(pred, -1.0, float(n) + 1.0)  # guard int overflow
+        lo = jnp.floor(pred).astype(jnp.int64) - e0
+        hi = jnp.ceil(pred).astype(jnp.int64) + e0
+        return base.clip_bound(lo, hi, n)
+
+    return base.IndexBuild(
+        name="pgm",
+        state=state,
+        lookup=lookup,
+        size_bytes=size,
+        hyper=dict(eps=eps, eps_internal=eps_internal, top_cutoff=top_cutoff,
+                   last_mile=last_mile),
+        meta={"max_err": max_err, "levels": depth, "n": n,
+              "segments": len(levels[0][0])},
+    )

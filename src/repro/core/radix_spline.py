@@ -1,0 +1,92 @@
+"""RadixSpline index (paper §3.2, Kipf et al. [18]).
+
+One-pass error-bounded linear spline over the CDF + a radix table over
+r-bit key prefixes that bounds the binary search for the spline segment.
+Lookup: radix probe (bit shift + two table loads) -> bounded search over
+spline knots -> linear interpolation -> bound of width 2*(eps+1).
+
+The spline fit guarantees interpolation error <= eps at every data point
+(chord-in-corridor construction, see _pla.greedy_spline); knots are data
+points so interpolation is monotone and the +1 gap argument (DESIGN.md §2)
+extends validity to absent keys.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import base, _pla, search
+
+
+@base.register("radix_spline")
+def build(
+    keys: np.ndarray,
+    eps: int = 32,
+    radix_bits: int = 16,
+    last_mile: str = "binary",
+) -> base.IndexBuild:
+    keys = np.asarray(keys)
+    n = len(keys)
+    x = base.np_keys_to_f64(keys)
+    y = np.arange(n, dtype=np.float64)
+    xu, y_first, span = _pla.group_rounded(x, y)
+
+    kx, ky = _pla.greedy_spline(xu, y_first, float(eps))
+    m = len(kx)
+
+    # ---- radix table over (key - min) >> shift ----
+    kmin = np.uint64(keys[0])
+    key_range = int(keys[-1]) - int(keys[0])
+    sig_bits = max(1, key_range.bit_length())
+    r = int(min(radix_bits, sig_bits))
+    shift = sig_bits - r
+    # prefixes of the spline KNOTS (uint64 domain; knots are data points, but
+    # kx is f64 — recover prefixes from the original keys via searchsorted).
+    knot_pos = np.searchsorted(x, kx, side="left")
+    knot_keys = keys[np.clip(knot_pos, 0, n - 1)]
+    prefixes = ((knot_keys - kmin) >> np.uint64(shift)).astype(np.int64)
+    table = np.searchsorted(prefixes, np.arange((1 << r) + 1), side="left")
+    table = np.minimum(table, m - 1).astype(np.int64)
+    max_gap = int(np.max(table[1:] - table[:-1])) if r > 0 else m
+
+    state = {
+        "kx": jnp.asarray(kx),
+        "ky": jnp.asarray(ky),
+        "table": jnp.asarray(table),
+        "kmin": jnp.uint64(kmin),
+    }
+    size = base.nbytes(kx, ky, table)
+    e = int(eps) + span + 1
+    max_err = 2 * e + 2
+
+    def lookup(state, q) -> base.SearchBound:
+        qf = q.astype(jnp.float64)
+        qi = q.astype(jnp.uint64)
+        delta = jnp.where(qi > state["kmin"], qi - state["kmin"], jnp.uint64(0))
+        p = jnp.clip((delta >> shift).astype(jnp.int64), 0, (1 << r) - 1)
+        slo = jnp.take(state["table"], p)
+        shi = jnp.take(state["table"], p + 1)
+        # segment = last knot <= q (upper_bound - 1), searched inside [slo,shi]
+        ub = search.bounded_binary(state["kx"], qf, slo, shi, max_gap + 2, side="right")
+        seg = jnp.clip(ub - 1, 0, m - 2)
+        x0 = jnp.take(state["kx"], seg)
+        x1 = jnp.take(state["kx"], seg + 1)
+        y0 = jnp.take(state["ky"], seg)
+        y1 = jnp.take(state["ky"], seg + 1)
+        dx = x1 - x0
+        t = jnp.where(dx > 0, (qf - x0) / jnp.where(dx == 0, 1.0, dx), 0.0)
+        t = jnp.clip(t, 0.0, 1.0)
+        pred = y0 + t * (y1 - y0)
+        lo = jnp.floor(pred).astype(jnp.int64) - e
+        hi = jnp.ceil(pred).astype(jnp.int64) + e
+        return base.clip_bound(lo, hi, n)
+
+    return base.IndexBuild(
+        name="radix_spline",
+        state=state,
+        lookup=lookup,
+        size_bytes=size,
+        hyper=dict(eps=eps, radix_bits=r, last_mile=last_mile),
+        meta={"max_err": max_err, "levels": 2, "n": n, "knots": m,
+              "radix_max_gap": max_gap},
+    )

@@ -1,0 +1,73 @@
+"""Radix binary search (paper §4.1.1 baseline, from SOSD [17]).
+
+Stores only the radix table of the RS approach: table[p] = LB of the first
+key with prefix p.  Lookup = one shift + two table gathers.  Exhibits the
+paper's face-dataset failure mode: top-end outliers inflate the key range,
+making the fixed prefix bits nearly useless.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import base
+
+
+@base.register("rbs")
+def build(
+    keys: np.ndarray,
+    radix_bits: int = 16,
+    last_mile: str = "binary",
+) -> base.IndexBuild:
+    keys = np.asarray(keys)
+    n = len(keys)
+    kmin = np.uint64(keys[0])
+    key_range = int(keys[-1]) - int(keys[0])
+    sig_bits = max(1, key_range.bit_length())
+    r = int(min(radix_bits, sig_bits))
+    shift = sig_bits - r
+
+    prefixes = ((keys - kmin) >> np.uint64(shift)).astype(np.int64)
+    table = np.searchsorted(prefixes, np.arange((1 << r) + 1), side="left")
+    table = table.astype(np.int64)
+    max_gap = int(np.max(table[1:] - table[:-1]))
+
+    state = {"table": jnp.asarray(table), "kmin": jnp.uint64(kmin)}
+    size = base.nbytes(table)
+
+    def lookup(state, q) -> base.SearchBound:
+        qi = q.astype(jnp.uint64)
+        delta = jnp.where(qi > state["kmin"], qi - state["kmin"], jnp.uint64(0))
+        p = jnp.clip((delta >> shift).astype(jnp.int64), 0, (1 << r) - 1)
+        lo = jnp.take(state["table"], p)
+        hi = jnp.take(state["table"], p + 1)
+        return base.clip_bound(lo, hi, n)
+
+    return base.IndexBuild(
+        name="rbs",
+        state=state,
+        lookup=lookup,
+        size_bytes=size,
+        hyper=dict(radix_bits=r, last_mile=last_mile),
+        meta={"max_err": max_gap + 1, "levels": 1, "n": n},
+    )
+
+
+@base.register("binary_search")
+def build_bs(keys: np.ndarray, last_mile: str = "binary") -> base.IndexBuild:
+    """The paper's BS baseline: size zero, bound = whole array."""
+    keys = np.asarray(keys)
+    n = len(keys)
+
+    def lookup(state, q) -> base.SearchBound:
+        z = jnp.zeros(q.shape, jnp.int64)
+        return z, jnp.full(q.shape, n, jnp.int64)
+
+    return base.IndexBuild(
+        name="binary_search",
+        state={},
+        lookup=lookup,
+        size_bytes=0,
+        hyper=dict(last_mile=last_mile),
+        meta={"max_err": n + 1, "levels": 0, "n": n},
+    )

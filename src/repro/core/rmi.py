@@ -1,0 +1,192 @@
+"""Two-stage Recursive Model Index (paper §3.1, Kraska et al. [19]).
+
+Stage 1 (linear | cubic) makes a coarse CDF prediction that selects one of B
+stage-2 linear models; the selected model refines the prediction, and its
+stored worst-case error yields the search bound.  Trained top-down, exactly
+as the paper describes (Eq. 1 / Eq. 2), with closed-form least squares.
+
+Validity for ABSENT keys: stage-2 slopes are clipped to >= 0 and each
+bucket's error is computed over (a) every key mapping to the bucket and
+(b) the boundary key preceding the bucket (target = first position of the
+bucket).  With a monotone stage-1 this makes the bound valid for every
+integer query — see DESIGN.md §2 and tests/test_core_validity.py.
+
+Implementation note: bucket selection and stage-2 prediction are evaluated
+through the SAME jitted expressions at build time and at lookup time.  A
+numpy-side replica can differ by 1 ulp (XLA may contract a*u+b into an FMA),
+which near a bucket boundary silently assigns a key's error to the wrong
+model — observed as rare validity violations on the face/osm surrogates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import base
+
+
+def _fit_linear(u: np.ndarray, y: np.ndarray):
+    """Closed-form least squares y ~ a*u + b (f64)."""
+    n = len(u)
+    su, sy = u.sum(), y.sum()
+    suu, suy = (u * u).sum(), (u * y).sum()
+    denom = n * suu - su * su
+    if denom <= 0:
+        return 0.0, float(y.mean()) if n else 0.0
+    a = (n * suy - su * sy) / denom
+    b = (sy - a * su) / n
+    return float(a), float(b)
+
+
+def _stage1_bucket(coeffs, x0, inv_range, scale, B, q):
+    """jnp: query/key -> (normalized u, stage-1 prediction, bucket)."""
+    u = (q.astype(jnp.float64) - x0) * inv_range
+    p1 = jnp.zeros_like(u)
+    for i in range(coeffs.shape[0]):
+        p1 = p1 * u + coeffs[i]
+    bkt = jnp.clip(jnp.floor(p1 * scale), 0, B - 1).astype(jnp.int64)
+    return u, bkt
+
+
+def _stage2_pred(a2, b2, u, bkt):
+    """jnp: the exact arithmetic the lookup path runs."""
+    return jnp.take(a2, bkt) * u + jnp.take(b2, bkt)
+
+
+@base.register("rmi")
+def build(
+    keys: np.ndarray,
+    branching: int = 1024,
+    stage1: str = "linear",
+    last_mile: str = "binary",
+) -> base.IndexBuild:
+    keys = np.asarray(keys)
+    n = len(keys)
+    x = base.np_keys_to_f64(keys)
+    y = np.arange(n, dtype=np.float64)
+
+    # Normalize keys to [0, 1] for conditioning; constants live in the state.
+    x0, x1 = float(x[0]), float(x[-1])
+    inv_range = 1.0 / (x1 - x0) if x1 > x0 else 1.0
+    u_np = (x - x0) * inv_range
+
+    # ---- stage 1 (fit in numpy; inference always through the jnp path) ----
+    if stage1 == "linear":
+        a, b = _fit_linear(u_np, y)
+        coeffs = np.array([max(a, 0.0), b], np.float64)
+    elif stage1 == "cubic":
+        coeffs = np.polyfit(u_np, y, 3).astype(np.float64)
+        # The absent-key guarantee needs a monotone stage 1.  Keep the cubic
+        # only if its derivative is >= 0 on [0, 1] (checked at the endpoints
+        # and the vertex), else fall back to linear — CDFShop-style model
+        # selection keeps only valid candidates.
+        c3, c2, c1_, _ = coeffs
+        dvals = [c1_, 3 * c3 + 2 * c2 + c1_]
+        if abs(c3) > 1e-30:
+            v = -c2 / (3 * c3)
+            if 0.0 < v < 1.0:
+                dvals.append(3 * c3 * v * v + 2 * c2 * v + c1_)
+        if min(dvals) < 0:
+            a, b = _fit_linear(u_np, y)
+            coeffs = np.array([max(a, 0.0), b], np.float64)
+            stage1 = "linear"
+    elif stage1 == "minmax":
+        coeffs = np.array([float(n - 1), 0.0], np.float64)
+    else:
+        raise ValueError(f"unknown stage1 model {stage1!r}")
+
+    B = int(branching)
+    scale = B / n
+    infer1 = jax.jit(functools.partial(
+        _stage1_bucket, jnp.asarray(coeffs), jnp.float64(x0),
+        jnp.float64(inv_range), scale, B))
+    u_j, bkt_j = infer1(jnp.asarray(keys))
+    u = np.asarray(u_j)  # f64, identical to what lookups will compute
+    bucket = np.asarray(bkt_j)
+    monotone = stage1 in ("linear", "minmax")
+    if not monotone:
+        bucket_mono = np.maximum.accumulate(bucket)
+    else:
+        bucket_mono = bucket
+
+    # ---- stage 2: grouped closed-form least squares ----
+    cnt = np.bincount(bucket, minlength=B).astype(np.float64)
+    su = np.bincount(bucket, weights=u, minlength=B)
+    sy = np.bincount(bucket, weights=y, minlength=B)
+    suu = np.bincount(bucket, weights=u * u, minlength=B)
+    suy = np.bincount(bucket, weights=u * y, minlength=B)
+    denom = cnt * suu - su * su
+    ok = denom > 1e-30
+    a2 = np.where(ok, (cnt * suy - su * sy) / np.where(ok, denom, 1.0), 0.0)
+    a2 = np.maximum(a2, 0.0)  # monotone within bucket
+    with np.errstate(invalid="ignore"):
+        b2 = np.where(cnt > 0, (sy - a2 * su) / np.where(cnt > 0, cnt, 1.0), 0.0)
+
+    # Empty buckets: constant model at the first position of the next
+    # non-empty bucket (exact LB for any query landing there; see DESIGN.md).
+    first_pos = np.searchsorted(bucket_mono, np.arange(B), side="left").astype(np.float64)
+    empty = cnt == 0
+    b2 = np.where(empty, first_pos, b2)
+
+    # ---- per-bucket worst-case error, through the lookup's arithmetic ----
+    a2_j, b2_j = jnp.asarray(a2), jnp.asarray(b2)
+    pred = np.asarray(jax.jit(_stage2_pred)(a2_j, b2_j, u_j, bkt_j))
+    abs_err = np.abs(pred - y)
+    err = np.zeros(B, np.float64)
+    np.maximum.at(err, bucket, abs_err)
+    # Boundary safety (both sides): a query in the gap between two buckets'
+    # key ranges maps to one of them, so each bucket's model must also bound
+    # (a) the key PRECEDING its first key (target = first position) and
+    # (b) the key FOLLOWING its last key (target = that key's position).
+    nonempty = np.flatnonzero(~empty)
+    fp = first_pos[nonempty].astype(np.int64)
+    has_prev = fp > 0
+    ne, fpp = nonempty[has_prev], fp[has_prev]
+    bpred = np.asarray(jax.jit(_stage2_pred)(
+        a2_j, b2_j, jnp.asarray(u[fpp - 1]), jnp.asarray(ne)))
+    np.maximum.at(err, ne, np.abs(bpred - fp.astype(np.float64)[has_prev]))
+    lp = np.searchsorted(bucket_mono, nonempty, side="right") - 1  # last pos
+    has_next = lp < n - 1
+    ne2, lpn = nonempty[has_next], lp[has_next] + 1
+    apred = np.asarray(jax.jit(_stage2_pred)(
+        a2_j, b2_j, jnp.asarray(u[lpn]), jnp.asarray(ne2)))
+    np.maximum.at(err, ne2, np.abs(apred - lpn.astype(np.float64)))
+
+    err_i = np.ceil(err).astype(np.int64) + 1  # +1: interior-gap safety margin
+    max_err = int(err_i.max()) if B else 1
+
+    state: Dict[str, Any] = {
+        "coeffs": jnp.asarray(coeffs),
+        "a2": a2_j,
+        "b2": b2_j,
+        "err": jnp.asarray(err_i),
+        "x0": jnp.float64(x0),
+        "inv_range": jnp.float64(inv_range),
+    }
+    hyper = dict(branching=B, stage1=stage1, last_mile=last_mile)
+    size = base.nbytes(coeffs, a2, b2, err_i.astype(np.int32)) + 16
+
+    def lookup(state, q) -> base.SearchBound:
+        uq, bkt = _stage1_bucket(
+            state["coeffs"], state["x0"], state["inv_range"], scale, B, q)
+        p2 = _stage2_pred(state["a2"], state["b2"], uq, bkt)
+        # clamp in FLOAT space first: an extreme query (e.g. 2^64-1) can
+        # predict ~1e19, which overflows the int64 cast and wraps the bound
+        p2 = jnp.clip(p2, -1.0, float(n) + 1.0)
+        e = jnp.take(state["err"], bkt)
+        lo = jnp.floor(p2).astype(jnp.int64) - e
+        hi = jnp.ceil(p2).astype(jnp.int64) + e
+        return base.clip_bound(lo, hi, n)
+
+    return base.IndexBuild(
+        name="rmi",
+        state=state,
+        lookup=lookup,
+        size_bytes=size,
+        hyper=hyper,
+        meta={"max_err": 2 * max_err + 2, "levels": 2, "n": n},
+    )

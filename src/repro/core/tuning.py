@@ -1,0 +1,46 @@
+"""CDFShop-style configuration sweeps (paper §3.1 / §4.2).
+
+The paper tunes every structure across ~10 configurations from minimum to
+maximum size and reports the Pareto frontier.  ``LADDERS`` mirrors that: a
+size ladder per structure; ``sweep`` builds each rung and hands the builds to
+the caller (benchmarks attach timings, analysis attaches metrics).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+from repro.core import base
+
+LADDERS: Dict[str, List[dict]] = {
+    "rmi": [dict(branching=b, stage1=s1)
+            for b in (2**6, 2**8, 2**10, 2**12, 2**14, 2**16, 2**18)
+            for s1 in ("linear",)]
+    + [dict(branching=2**10, stage1="cubic"), dict(branching=2**14, stage1="cubic")],
+    "pgm": [dict(eps=e) for e in (8, 16, 32, 64, 128, 256, 512, 1024, 2048)],
+    "radix_spline": [dict(eps=e, radix_bits=r)
+                     for (e, r) in ((8, 20), (16, 18), (32, 16), (64, 16),
+                                    (128, 14), (256, 12), (512, 10), (1024, 8))],
+    "btree": [dict(sample=s) for s in (1, 2, 4, 8, 16, 32, 64, 256, 1024)],
+    "ibtree": [dict(sample=s) for s in (1, 4, 16, 64, 256)],
+    "rbs": [dict(radix_bits=r) for r in (6, 8, 10, 12, 14, 16, 18, 20, 22)],
+    "binary_search": [dict()],
+    "robin_hash": [dict(load_factor=f) for f in (0.25, 0.5, 0.8)],
+}
+
+
+def sweep(
+    keys: np.ndarray,
+    names: Iterable[str] = ("rmi", "pgm", "radix_spline", "btree", "rbs",
+                            "binary_search"),
+    max_configs: int | None = None,
+) -> List[base.IndexBuild]:
+    builds = []
+    for name in names:
+        rungs = LADDERS[name]
+        if max_configs:
+            rungs = rungs[:max_configs]
+        for hyper in rungs:
+            builds.append(base.REGISTRY[name](keys, **hyper))
+    return builds

@@ -1,0 +1,1 @@
+"""Datasets (SOSD surrogates) and the LM data pipeline."""

@@ -1,0 +1,67 @@
+"""Sequence packing via learned-index offset lookup.
+
+Packing N documents into fixed-length training rows needs, for every token
+offset in the packed stream, the id of the document that owns it:
+``doc = upper_bound(cum_lens, offset) - 1`` — the paper's §2 operation over
+the cumulative-length array.  For millions of documents this lookup is the
+packing bottleneck; an RMI over ``cum_lens`` turns each probe into O(1)
+predict + tiny fixup, exactly the paper's pitch, measured end-to-end in
+benchmarks/pareto.py's companion (examples/packing_pipeline.py).
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.core import rmi as rmi_mod
+from repro.core import base as core_base
+
+
+class PackedIndex:
+    """Offset -> (doc id, within-doc position) via an RMI over cum_lens."""
+
+    def __init__(self, doc_lens: np.ndarray, branching: int = 1024):
+        self.doc_lens = np.asarray(doc_lens, np.int64)
+        self.cum = np.concatenate([[0], np.cumsum(self.doc_lens)])
+        self.total = int(self.cum[-1])
+        # index the cumulative starts (sorted, unique since lens > 0)
+        self.index = rmi_mod.build(self.cum.astype(np.uint64),
+                                   branching=branching)
+
+    def locate(self, offsets: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized: packed offsets -> (doc ids, within-doc positions)."""
+        import jax.numpy as jnp
+        from repro.core import search
+
+        q = jnp.asarray(offsets.astype(np.uint64))
+        lo, hi = self.index.lookup(self.index.state, q)
+        # LB gives first cum >= offset; owner doc = LB - 1 when cum < offset
+        pos = np.asarray(search.bounded_binary(
+            jnp.asarray(self.cum.astype(np.uint64)), q, lo, hi,
+            self.index.meta["max_err"]))
+        exact = self.cum[np.minimum(pos, len(self.cum) - 1)] == offsets
+        doc = np.where(exact, pos, pos - 1).astype(np.int64)
+        within = offsets - self.cum[doc]
+        return doc, within
+
+    def locate_oracle(self, offsets: np.ndarray):
+        pos = np.searchsorted(self.cum, offsets, side="left")
+        exact = self.cum[np.minimum(pos, len(self.cum) - 1)] == offsets
+        doc = np.where(exact, pos, pos - 1).astype(np.int64)
+        return doc, offsets - self.cum[doc]
+
+
+def pack_documents(doc_tokens, seq_len: int, pad_id: int = 0,
+                   eod_id: int = 1) -> Iterator[np.ndarray]:
+    """Greedy-concatenate documents into fixed rows with EOD separators."""
+    buf: list = []
+    for doc in doc_tokens:
+        buf.extend(list(doc))
+        buf.append(eod_id)
+        while len(buf) >= seq_len:
+            yield np.asarray(buf[:seq_len], np.int32)
+            buf = buf[seq_len:]
+    if buf:
+        row = buf + [pad_id] * (seq_len - len(buf))
+        yield np.asarray(row, np.int32)

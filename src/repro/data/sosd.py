@@ -1,0 +1,145 @@
+"""Surrogate generators for the paper's four real-world datasets (§4.1.2).
+
+The container is offline, so we synthesize key sets that reproduce the
+documented CDF *shape* of each dataset (Figure 6 and the text):
+
+  amzn  book popularity counts — smooth heavy-tailed CDF, locally near-linear
+  face  user IDs ~ uniform over (0, 2^50) plus ~100 outliers in (2^59, 2^64)
+        (the outliers that break RBS's prefix bits, §4.2 "Performance of RBS")
+  osm   Hilbert-curve cell ids of clustered 2-D locations — globally smooth,
+        locally erratic ("lack of local structure ... artifact of the
+        technique used to project the Earth into one-dimensional space")
+  wiki  edit timestamps — bursty arrival process with periodic rate
+
+All generators return exactly ``n`` sorted unique uint64 keys, fully
+determined by ``seed``.  EXPERIMENTS.md flags every paper comparison as
+surrogate-based.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["DATASETS", "generate", "make_queries"]
+
+
+def _finalize(raw: np.ndarray, n: int, rng: np.random.Generator) -> np.ndarray:
+    keys = np.unique(raw.astype(np.uint64))
+    while len(keys) < n:  # top up collisions
+        extra = rng.integers(1, 1 << 62, size=(n - len(keys)) * 2, dtype=np.uint64)
+        keys = np.unique(np.concatenate([keys, extra]))
+    if len(keys) > n:
+        sel = rng.choice(len(keys), size=n, replace=False)
+        keys = np.sort(keys[sel])
+    return keys
+
+
+def gen_amzn(n: int, seed: int = 0) -> np.ndarray:
+    """Popularity counts: lognormal body + Pareto tail, scaled to ~2^47."""
+    rng = np.random.default_rng(seed)
+    m = int(n * 1.25)
+    body = rng.lognormal(mean=10.0, sigma=2.2, size=m)
+    tail = (rng.pareto(1.1, size=m // 20) + 1.0) * np.exp(14.0)
+    raw = np.concatenate([body, tail])
+    raw = raw / raw.max() * (2.0**47)
+    return _finalize(np.maximum(raw, 1.0), n, rng)
+
+
+def gen_face(n: int, seed: int = 0) -> np.ndarray:
+    """Uniform IDs in (0, 2^50) with ~100 extreme outliers in (2^59, 2^64)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(1, 1 << 50, size=int(n * 1.05), dtype=np.uint64)
+    n_out = 100
+    outliers = rng.integers(1 << 59, (1 << 63) + ((1 << 63) - 1), size=n_out,
+                            dtype=np.uint64)
+    keys = _finalize(raw, n - n_out, rng)
+    return np.sort(np.concatenate([keys, np.unique(outliers)]))[:n]
+
+
+def _hilbert_xy2d(order: int, x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Vectorized Hilbert curve distance (uint64), standard xy2d."""
+    d = np.zeros(x.shape, np.uint64)
+    x = x.astype(np.uint64).copy()
+    y = y.astype(np.uint64).copy()
+    side = np.uint64(1) << np.uint64(order)
+    s = np.uint64(1) << np.uint64(order - 1)
+    one = np.uint64(1)
+    while s > 0:
+        rx = ((x & s) > 0).astype(np.uint64)
+        ry = ((y & s) > 0).astype(np.uint64)
+        d += s * s * ((np.uint64(3) * rx) ^ ry)
+        # rotate quadrant (classic rot(): reflection uses the full side)
+        swap = ry == 0
+        flip = swap & (rx == 1)
+        x_f = np.where(flip, side - one - x, x)
+        y_f = np.where(flip, side - one - y, y)
+        x, y = np.where(swap, y_f, x_f), np.where(swap, x_f, y_f)
+        s >>= one
+    return d
+
+
+def gen_osm(n: int, seed: int = 0, order: int = 24) -> np.ndarray:
+    """Hilbert cell ids of clustered 2-D points (cities + background)."""
+    rng = np.random.default_rng(seed)
+    m = int(n * 1.3)
+    n_clusters = 256
+    side = float(1 << order)
+    cx = rng.uniform(0, side, n_clusters)
+    cy = rng.uniform(0, side, n_clusters)
+    weights = rng.pareto(1.0, n_clusters) + 0.05
+    weights /= weights.sum()
+    assign = rng.choice(n_clusters, size=m, p=weights)
+    sx = side / 400.0
+    x = np.clip(cx[assign] + rng.normal(0, sx, m), 0, side - 1).astype(np.uint64)
+    y = np.clip(cy[assign] + rng.normal(0, sx, m), 0, side - 1).astype(np.uint64)
+    bg = rng.random(m) < 0.08  # uniform background points
+    x[bg] = rng.integers(0, int(side), size=int(bg.sum()), dtype=np.uint64)
+    y[bg] = rng.integers(0, int(side), size=int(bg.sum()), dtype=np.uint64)
+    d = _hilbert_xy2d(order, x, y)
+    return _finalize(d, n, rng)
+
+
+def gen_wiki(n: int, seed: int = 0) -> np.ndarray:
+    """Edit timestamps: exponential gaps, rate modulated daily + bursts."""
+    rng = np.random.default_rng(seed)
+    m = int(n * 1.15)
+    t = np.arange(m, dtype=np.float64)
+    rate = 1.0 + 0.8 * np.sin(2 * np.pi * t / 86400.0) ** 2
+    burst_at = rng.choice(m, size=m // 200, replace=False)
+    burst = np.zeros(m)
+    burst[burst_at] = rng.exponential(50.0, size=len(burst_at))
+    rate = rate + burst
+    gaps = rng.exponential(1.0, size=m) / rate * 1000.0
+    ts = np.cumsum(gaps) + 1.0e9
+    return _finalize(ts, n, rng)
+
+
+DATASETS = {
+    "amzn": gen_amzn,
+    "face": gen_face,
+    "osm": gen_osm,
+    "wiki": gen_wiki,
+}
+
+
+def generate(name: str, n: int, seed: int = 0) -> np.ndarray:
+    return DATASETS[name](n, seed)
+
+
+def make_queries(
+    keys: np.ndarray,
+    m: int,
+    seed: int = 0,
+    present_frac: float = 0.8,
+) -> np.ndarray:
+    """Lookup workload: sampled present keys + uniform absent keys (paper
+    samples lookups from the key set; absent keys exercise the §2 validity
+    definition for all integers)."""
+    rng = np.random.default_rng(seed + 1)
+    n_present = int(m * present_frac)
+    present = keys[rng.integers(0, len(keys), n_present)]
+    lo, hi = int(keys[0]), int(keys[-1])
+    absent = rng.integers(max(lo - 1000, 0), hi + 1000, size=m - n_present,
+                          dtype=np.uint64)
+    q = np.concatenate([present, absent])
+    rng.shuffle(q)
+    return q.astype(np.uint64)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's lookup hot path.
+
+  bounded_search/  tile-binned batched last-mile lower-bound search
+  rmi_lookup/      fused two-stage RMI inference (sorted + prefetched tiles)
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper incl. exact fallbacks), ref.py (pure-jnp oracle).  Kernels target
+TPU v5e and are validated with interpret=True on CPU (see tests/).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.bounded_search.ops import lower_bound_windows  # noqa: F401

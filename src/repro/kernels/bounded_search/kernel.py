@@ -1,0 +1,84 @@
+"""Tile-binned batched lower-bound search — the last-mile hot path.
+
+The paper's last-mile search is a dependent-load chain per query (binary
+search inside the bound).  The TPU-native form (DESIGN.md §2): bin queries
+by the DATA TILE containing their window, stream each tile HBM->VMEM once,
+and resolve all of the tile's queries with one vectorized rank count
+(``pos = lo + sum(window < q)``).  Data-dependent gathers become dense,
+tile-local vector compares; each data tile is touched exactly once per
+batch regardless of how many queries land in it.
+
+Grid: one step per data tile.  A query whose window starts in tile t may
+spill into tile t+1 (window width <= tile size), so the kernel sees two
+consecutive data tiles per step — expressed as two BlockSpecs over the same
+operand with index maps t and t+1 (Pallas blocks cannot overlap; two views
+can).
+
+Keys are uint32 (hi, lo) planes — see kernels/common.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import less_u64
+
+DATA_TILE = 2048  # uint32-pair elements per VMEM tile (2 tiles * 8B = 32 KiB)
+
+
+def _kernel(
+    dhi0_ref, dlo0_ref, dhi1_ref, dlo1_ref,
+    qhi_ref, qlo_ref, qlo_pos_ref, valid_ref,
+    out_ref,
+    *, window: int, n: int,
+):
+    t = pl.program_id(0)
+    base = t * DATA_TILE
+    # two consecutive data tiles, concatenated in VMEM
+    dhi = jnp.concatenate([dhi0_ref[...], dhi1_ref[...]])
+    dlo = jnp.concatenate([dlo0_ref[...], dlo1_ref[...]])
+
+    qhi = qhi_ref[0]            # [C]
+    qlo = qlo_ref[0]            # [C]
+    lo_pos = qlo_pos_ref[0]     # [C] window start (absolute)
+    valid = valid_ref[0]        # [C] slot occupied?
+
+    local = (lo_pos - base).astype(jnp.int32)          # [0, DATA_TILE)
+    offs = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], window), 1)
+    idx = local[:, None] + offs                        # [C, W] into 2 tiles
+    whi = jnp.take(dhi, idx, mode="clip")
+    wlo = jnp.take(dlo, idx, mode="clip")
+    in_range = (lo_pos[:, None] + offs) < n            # beyond-end = +inf
+    less = less_u64(whi, wlo, qhi[:, None], qlo[:, None]) & in_range
+    count = jnp.sum(less.astype(jnp.int32), axis=-1)
+    pos = (lo_pos + count).astype(jnp.int32)
+    out_ref[0] = jnp.where(valid, pos, -1)
+
+
+def lower_bound_kernel(
+    dhi, dlo,            # [n_pad] uint32 data planes (padded to tile multiple)
+    qhi, qlo,            # [n_tiles, C] binned query planes
+    lo_pos,              # [n_tiles, C] int32 absolute window starts
+    valid,               # [n_tiles, C] bool
+    *, window: int, n: int, interpret: bool = False,
+):
+    n_tiles = qhi.shape[0]
+    cap = qhi.shape[1]
+    last = dhi.shape[0] // DATA_TILE - 1
+
+    data_spec0 = pl.BlockSpec((DATA_TILE,), lambda t: (t,))
+    data_spec1 = pl.BlockSpec((DATA_TILE,), lambda t: (jnp.minimum(t + 1, last),))
+    q_spec = pl.BlockSpec((1, cap), lambda t: (t, 0))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, n=n),
+        grid=(n_tiles,),
+        in_specs=[data_spec0, data_spec0, data_spec1, data_spec1,
+                  q_spec, q_spec, q_spec, q_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, cap), jnp.int32),
+        interpret=interpret,
+    )(dhi, dlo, dhi, dlo, qhi, qlo, lo_pos, valid)

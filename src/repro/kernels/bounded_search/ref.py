@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tiled bounded last-mile search."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lower_bound_windows_ref(data, queries, lo, max_width: int):
+    """LB(q) for each query, given windows [lo, lo+max_width) known to
+    contain it.  Oracle ignores the windows and searches the whole array —
+    the kernel must agree wherever the window precondition holds."""
+    del lo, max_width
+    return jnp.searchsorted(data, queries, side="left").astype(jnp.int32)

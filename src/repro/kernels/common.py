@@ -1,0 +1,52 @@
+"""Shared helpers for the TPU lookup kernels.
+
+TPU VPU/MXU have no native 64-bit integer or float64 path, so 64-bit keys
+are carried as two uint32 planes (hi, lo) and compared lexicographically —
+the hardware adaptation of the paper's 64-bit-key experiments (DESIGN.md §2).
+32-bit datasets (paper §4.2.2) use a zero hi plane, one uniform code path.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def split_u64(a):
+    """Key array -> (hi, lo) uint32 planes (numpy or jnp).
+
+    32-bit-or-narrower inputs (paper §4.2.2; int32 serving tables) get a
+    zero hi plane without ever touching 64-bit ops — usable in contexts
+    where jax x64 is disabled."""
+    if isinstance(a, np.ndarray):
+        if a.dtype.itemsize <= 4:
+            lo = a.astype(np.uint32)
+            return np.zeros_like(lo), lo
+        a = a.astype(np.uint64)
+        return (a >> np.uint64(32)).astype(np.uint32), a.astype(np.uint32)
+    if jnp.dtype(a.dtype).itemsize <= 4:
+        lo = a.astype(jnp.uint32)
+        return jnp.zeros_like(lo), lo
+    a = a.astype(jnp.uint64)
+    return (a >> jnp.uint64(32)).astype(jnp.uint32), a.astype(jnp.uint32)
+
+
+def merge_u64(hi, lo):
+    return (np.asarray(hi).astype(np.uint64) << np.uint64(32)) | np.asarray(
+        lo
+    ).astype(np.uint64)
+
+
+def less_u64(a_hi, a_lo, b_hi, b_lo):
+    """(a < b) for keys as uint32 planes; works on jnp values in-kernel."""
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def pad_pow2(x: int, minimum: int = 128) -> int:
+    n = minimum
+    while n < x:
+        n *= 2
+    return n
+
+
+def pad_to(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple

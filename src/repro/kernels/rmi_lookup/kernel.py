@@ -1,0 +1,82 @@
+"""Fused two-stage RMI inference kernel (sorted queries, prefetched tiles).
+
+The paper's RMI hot path is: stage-1 predict -> select stage-2 model ->
+stage-2 predict -> error bound.  The stage-2 table (up to millions of rows)
+cannot live in VMEM, and per-query HBM gathers are the slowest thing a TPU
+can do.  TPU-native form (DESIGN.md §2): the wrapper sorts queries by
+bucket, so each query block touches a narrow band of the table; a scalar-
+prefetched block index maps exactly two consecutive table tiles into VMEM
+per block, and the model gather becomes a small in-VMEM ``take``.
+
+All model math is float32 (TPU has no f64 path); validity is preserved by
+re-verifying the per-bucket error table through this exact f32 pipeline at
+build time (ops.prepare_f32_state) — the beyond-paper fix for the paper's
+§4.2.2 observation that 32-bit math "caused floating point errors".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TABLE_TILE = 2048   # stage-2 rows per VMEM tile (3 arrays * 8 KiB)
+QUERY_BLOCK = 1024
+
+
+def _kernel(
+    tile_idx_ref,                      # scalar-prefetch: [n_blocks] int32
+    u_ref, bkt_ref,                    # [QUERY_BLOCK] f32 / int32
+    a0_ref, b0_ref, e0_ref,            # table tile t
+    a1_ref, b1_ref, e1_ref,            # table tile t+1
+    pred_ref, err_ref, ok_ref,
+):
+    g = pl.program_id(0)
+    start = tile_idx_ref[g] * TABLE_TILE
+    local = bkt_ref[...] - start                   # >= 0 (queries sorted)
+    ok = local < 2 * TABLE_TILE
+    lidx = jnp.clip(local, 0, 2 * TABLE_TILE - 1)
+    a = jnp.take(jnp.concatenate([a0_ref[...], a1_ref[...]]), lidx)
+    b = jnp.take(jnp.concatenate([b0_ref[...], b1_ref[...]]), lidx)
+    e = jnp.take(jnp.concatenate([e0_ref[...], e1_ref[...]]), lidx)
+    pred_ref[...] = a * u_ref[...] + b
+    err_ref[...] = e
+    ok_ref[...] = ok
+
+
+def rmi_infer_kernel(
+    tile_idx,                # [n_blocks] int32: table tile per query block
+    u_sorted, bkt_sorted,    # [m_pad] f32 / int32, sorted by bucket
+    a2, b2, err,             # [T_pad] f32 / f32 / int32 stage-2 table
+    *, interpret: bool = False,
+):
+    m_pad = u_sorted.shape[0]
+    n_blocks = m_pad // QUERY_BLOCK
+    last = a2.shape[0] // TABLE_TILE - 1
+
+    q_spec = pl.BlockSpec((QUERY_BLOCK,), lambda g, s: (g,))
+    t_spec0 = pl.BlockSpec((TABLE_TILE,), lambda g, s: (s[g],))
+    t_spec1 = pl.BlockSpec(
+        (TABLE_TILE,), lambda g, s: (jnp.minimum(s[g] + 1, last),)
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[q_spec, q_spec,
+                  t_spec0, t_spec0, t_spec0,
+                  t_spec1, t_spec1, t_spec1],
+        out_specs=[q_spec, q_spec, q_spec],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((m_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((m_pad,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(tile_idx, u_sorted, bkt_sorted, a2, b2, err, a2, b2, err)

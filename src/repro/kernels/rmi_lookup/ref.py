@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused RMI inference kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import split_u64
+
+
+def f32_u(state, queries):
+    """Query keys -> normalized f32 coordinate (the kernel's exact math)."""
+    qhi, qlo = split_u64(queries)
+    qf = qhi.astype(jnp.float32) * jnp.float32(4294967296.0) + qlo.astype(
+        jnp.float32
+    )
+    return (qf - state.x0) * state.inv_range
+
+
+def rmi_infer_ref(state, queries):
+    """(pred, err, bucket) via plain jnp — no tiling, no prefetch."""
+    u = f32_u(state, queries)
+    p1 = state.c0 * u + state.c1
+    bkt = jnp.clip(jnp.floor(p1 * state.scale), 0, state.branching - 1)
+    bkt = bkt.astype(jnp.int32)
+    pred = jnp.take(state.a2, bkt) * u + jnp.take(state.b2, bkt)
+    err = jnp.take(state.err, bkt)
+    return pred, err, bkt
+
+
+def rmi_bounds_ref(state, queries, n: int):
+    pred, err, _ = rmi_infer_ref(state, queries)
+    pred = jnp.clip(pred, -1.0, float(n) + 1.0)  # guard int32 overflow
+    lo = jnp.clip(jnp.floor(pred).astype(jnp.int32) - err, 0, n)
+    hi = jnp.clip(jnp.ceil(pred).astype(jnp.int32) + err, 0, n)
+    return lo, hi
+
+
+def rmi_lookup_ref(data, queries):
+    """End-to-end ground truth: exact lower bound."""
+    return jnp.searchsorted(data, queries, side="left").astype(jnp.int32)

@@ -1,0 +1,51 @@
+"""Serve driver: batched requests through the paged-KV engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
+        --requests 8 --max-new 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get, get_smoke
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=args.max_batch,
+                         max_seq=args.max_seq)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    rids = [engine.submit(
+        list(rng.integers(2, cfg.vocab, int(rng.integers(3, 10)))),
+        max_new=args.max_new) for _ in range(args.requests)]
+    outs = engine.run(max_steps=args.requests * (args.max_new + 12))
+    dt = time.time() - t0
+    n_tok = sum(len(v) for v in outs.values())
+    for rid in rids:
+        print(f"request {rid}: {outs[rid]}")
+    print(f"\n{n_tok} tokens for {len(rids)} requests in {dt:.1f}s "
+          f"({n_tok/dt:.1f} tok/s, continuous batching over "
+          f"{args.max_batch} slots); kv pool util now "
+          f"{engine.kv.alloc.utilization:.2f}")
+
+
+if __name__ == "__main__":
+    main()

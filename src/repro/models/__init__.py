@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures (dense / ssm / hybrid / moe /
+enc-dec / vlm families) as pure-JAX modules with logical-axis sharding."""

@@ -1,0 +1,186 @@
+"""Encoder-decoder (whisper-tiny backbone).
+
+The audio frontend (log-mel + conv downsampling) is a STUB per the
+assignment: ``input_specs()`` supplies precomputed frame embeddings
+[B, S_enc, d_model].  The backbone is faithful: bidirectional encoder with
+learned positions, causal decoder with cross-attention, layernorm + gelu,
+MHA (n_kv == n_heads), no RoPE.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.dist.sharding import logical_constraint
+
+
+def _init_xattn(cfg: ModelConfig, key):
+    return L.init_attention(cfg, key)
+
+
+def init_encdec(cfg: ModelConfig, key) -> Dict[str, Any]:
+    p: Dict[str, Any] = {
+        "embed": L.init_embed(cfg, jax.random.fold_in(key, 0)),
+        "enc_pos": (jax.random.normal(jax.random.fold_in(key, 1),
+                                      (cfg.encoder_seq, cfg.d_model)) * 0.02
+                    ).astype(jnp.dtype(cfg.dtype)),
+        "dec_pos": (jax.random.normal(jax.random.fold_in(key, 2),
+                                      (32768, cfg.d_model)) * 0.02
+                    ).astype(jnp.dtype(cfg.dtype)),
+    }
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": L.init_norm(cfg, cfg.d_model),
+            "attn": L.init_attention(cfg, k1),
+            "norm2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(cfg, k2),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": L.init_norm(cfg, cfg.d_model),
+            "attn": L.init_attention(cfg, k1),
+            "norm_x": L.init_norm(cfg, cfg.d_model),
+            "xattn": _init_xattn(cfg, k2),
+            "norm2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(cfg, k3),
+        }
+
+    p["enc"] = jax.vmap(enc_layer)(
+        jax.random.split(jax.random.fold_in(key, 3), cfg.encoder_layers))
+    p["dec"] = jax.vmap(dec_layer)(
+        jax.random.split(jax.random.fold_in(key, 4), cfg.n_layers))
+    p["enc_norm"] = L.init_norm(cfg, cfg.d_model)
+    p["final_norm"] = L.init_norm(cfg, cfg.d_model)
+    return p
+
+
+def encdec_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    norm = {"scale": ("embed",), "bias": ("embed",)} if cfg.norm == "layernorm" \
+        else {"scale": ("embed",)}
+    attn = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        attn = dict(attn, bq=("heads", "head_dim"), bk=("kv_heads", "head_dim"),
+                    bv=("kv_heads", "head_dim"))
+    mlp = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if cfg.act == "swiglu":
+        mlp["wg"] = ("embed", "mlp")
+
+    def ld(tree):  # add scan "layers" dim
+        return jax.tree.map(lambda n: ("layers",) + n, tree,
+                            is_leaf=lambda x: isinstance(x, tuple) and all(
+                                isinstance(e, (str, type(None))) for e in x))
+
+    emb = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        emb["head"] = ("embed", "vocab")
+    return {
+        "embed": emb,
+        "enc_pos": (None, "embed"),
+        "dec_pos": (None, "embed"),
+        "enc": ld({"norm1": norm, "attn": attn, "norm2": norm, "mlp": mlp}),
+        "dec": ld({"norm1": norm, "attn": attn, "norm_x": norm, "xattn": attn,
+                   "norm2": norm, "mlp": mlp}),
+        "enc_norm": dict(norm),
+        "final_norm": dict(norm),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: [B, S_enc, d] stub embeddings -> encoder states."""
+    x = frames + params["enc_pos"][None, : frames.shape[1]]
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                 frames.shape[:2])
+
+    def body(x, lp):
+        h = L.norm(cfg, x, lp["norm1"])
+        h = L.attention(cfg, lp["attn"], h, positions, causal=False)
+        x = x + h
+        h = L.norm(cfg, x, lp["norm2"])
+        return x + L.mlp(cfg, lp["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.norm(cfg, x, params["enc_norm"])
+
+
+def encdec_forward(cfg: ModelConfig, params, frames, tokens):
+    """Training/prefill: (frames [B,Se,d], tokens [B,Sd]) -> (logits, aux)."""
+    enc_out = encode(cfg, params, frames)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = L.embed(cfg, params["embed"], tokens)
+    x = x + params["dec_pos"][None, :s]
+    x = logical_constraint(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        h = L.norm(cfg, x, lp["norm1"])
+        h = L.attention(cfg, lp["attn"], h, positions, causal=True)
+        x = x + h
+        h = L.norm(cfg, x, lp["norm_x"])
+        x = x + L.cross_attention(cfg, lp["xattn"], h, enc_out)
+        h = L.norm(cfg, x, lp["norm2"])
+        return x + L.mlp(cfg, lp["mlp"], h), None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = L.norm(cfg, x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encdec_cache_shapes(cfg: ModelConfig, batch: int, s_max: int):
+    dt = jnp.dtype(cfg.dtype)
+    kv = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jax.ShapeDtypeStruct(kv, dt),
+        "v": jax.ShapeDtypeStruct(kv, dt),
+        "enc_out": jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), dt),
+        "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig):
+    kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {"k": kv, "v": kv, "enc_out": ("batch", None, None), "len": (None,)}
+
+
+def encdec_decode(cfg: ModelConfig, params, cache, tokens):
+    """One decode step with cached encoder states + decoder KV cache."""
+    b = tokens.shape[0]
+    positions = cache["len"][:, None]
+    x = L.embed(cfg, params["embed"], tokens)
+    pos_emb = jnp.take(params["dec_pos"], jnp.clip(cache["len"], 0, 32767),
+                       axis=0)
+    x = x + pos_emb[:, None]
+    enc_out = cache["enc_out"]
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        h = L.norm(cfg, x, lp["norm1"])
+        h, ck, cv = L.attention_kv(cfg, lp["attn"], h, positions, ck, cv,
+                                   cache["len"])
+        x = x + h
+        h = L.norm(cfg, x, lp["norm_x"])
+        x = x + L.cross_attention(cfg, lp["xattn"], h, enc_out)
+        h = L.norm(cfg, x, lp["norm2"])
+        x = x + L.mlp(cfg, lp["mlp"], h)
+        return x, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(body, x,
+                                     (params["dec"], cache["k"], cache["v"]))
+    x = L.norm(cfg, x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)[:, 0]
+    new_cache = dict(cache, k=new_k, v=new_v, len=cache["len"] + 1)
+    return logits, new_cache

@@ -1,0 +1,331 @@
+"""Shared model layers: norms, RoPE, GQA attention, MLPs.
+
+All layers are pure functions over param pytrees; sharding is expressed via
+logical-axis annotations attached at init time (dist/sharding.py) plus
+with_sharding_constraint on the few activation points that matter.
+
+Attention is flash-style pure JAX: online-softmax over KV chunks inside a
+lax.scan over Q chunks — O(S * chunk) live memory instead of O(S^2), which
+is what lets the 32k prefill cells compile inside a v5e HBM budget without
+a hand-written attention kernel (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.dist.sharding import logical_constraint
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(cfg: ModelConfig, x, p):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p.get("bias"))
+
+
+def init_norm(cfg: ModelConfig, d: int):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(cfg: ModelConfig, key) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": (jax.random.normal(k1, (d, nh, hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, nkv, hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, nkv, hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (nh, hd, d)) * s).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh, hd), dt)
+        p["bk"] = jnp.zeros((nkv, hd), dt)
+        p["bv"] = jnp.zeros((nkv, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _pick_chunk(s_len: int, target: int) -> int:
+    """Largest divisor of s_len <= target (>= 128); whole-seq if none —
+    non-power-of-two sequences (whisper's 1500 frames) fall back cleanly."""
+    if s_len <= target:
+        return s_len
+    for d in range(target, 127, -1):
+        if s_len % d == 0:
+            return d
+    return s_len
+
+
+def _flash_body(q, k, v, q_pos, k_pos, causal: bool, window: int, scale):
+    """One (q-block, kv-chunk) online-softmax step.
+
+    q: [B, Qb, H, D]; k/v: [B, Kb, G, D] (GQA groups broadcast).
+    Returns unnormalized accumulators (m, l, acc).
+    """
+    b, qb, h, d = q.shape
+    g = k.shape[2]
+    rep = h // g
+    qg = q.reshape(b, qb, g, rep, d)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.ones((qb, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                          # [b,g,r,q]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bgrqk,bkgd->bgrqd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def attention(cfg: ModelConfig, p, x, positions, causal: bool = True):
+    """Flash-style attention: online softmax over a lax.scan of KV chunks,
+    with the FULL query axis vectorized.
+
+    Q stays a real (shardable) tensor dim, so sequence parallelism shards
+    the quadratic work across the mesh; only KV is scanned.  (Scanning Q
+    too — the first implementation — sliced a sharded dim, which SPMD can
+    only handle by replicating: measured 16x HLO-FLOP inflation on the
+    seq-parallel prefill cells.)  K/V are constrained seq-UNSHARDED here:
+    the one all-gather per layer this induces is the standard SP cost and
+    is what the roofline collective term charges.
+    """
+    b, s_len, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = logical_constraint(q, ("batch", "seq", "heads", None))
+    k = logical_constraint(k, ("batch", None, "kv_heads", None))
+    v = logical_constraint(v, ("batch", None, "kv_heads", None))
+
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g, rep = nkv, nh // nkv
+    scale = hd ** -0.5
+    ck = _pick_chunk(s_len, cfg.attn_chunk)
+    n_chunks = s_len // ck
+
+    kc = k.reshape(b, n_chunks, ck, nkv, hd).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, ck, nkv, hd).swapaxes(0, 1)
+    q_pos = jnp.arange(s_len)
+
+    def kv_chunk(acc, ki):
+        kb, vb, k_idx = ki
+        m_p, l_p, a_p = acc
+        k_pos = k_idx * ck + jnp.arange(ck)
+        m_n, l_n, a_n = _flash_body(q, kb, vb, q_pos, k_pos, causal,
+                                    cfg.attn_window, scale)
+        m = jnp.maximum(m_p, m_n)
+        c_p = jnp.exp(m_p - m)
+        c_n = jnp.exp(m_n - m)
+        l = l_p * c_p + l_n * c_n
+        a = a_p * c_p[..., None] + a_n * c_n[..., None]
+        return (m, l, a), None
+
+    init = (
+        jnp.full((b, g, rep, s_len), NEG_INF, jnp.float32),
+        jnp.zeros((b, g, rep, s_len), jnp.float32),
+        jnp.zeros((b, g, rep, s_len, hd), jnp.float32),
+    )
+    (m, l, a), _ = jax.lax.scan(kv_chunk, init,
+                                (kc, vc, jnp.arange(n_chunks)))
+    out = a / jnp.maximum(l, 1e-30)[..., None]              # [b,g,r,s,hd]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s_len, nh, hd)
+    out = out.astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return logical_constraint(y, ("batch", "seq", None))
+
+
+def attention_kv(cfg: ModelConfig, p, x, positions, cache_k, cache_v,
+                 cache_len):
+    """Decode step: one new token per sequence attending to the cache.
+
+    x: [B, 1, d]; cache_k/v: [B, S_max, n_kv, hd]; cache_len: fill per seq.
+    The new K/V is scattered into the cache in place (the caller donates the
+    buffers), then attention runs over the whole cache with a length mask —
+    no cache copy, O(S_max) bytes touched.
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(cfg, p, x, positions)
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g, rep = nkv, nh // nkv
+    s_max = cache_k.shape[1]
+
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, cache_len].set(k[:, 0])
+    cache_v = cache_v.at[bidx, cache_len].set(v[:, 0])
+    cache_k = logical_constraint(cache_k, ("batch", "kv_seq", "kv_heads", None))
+    cache_v = logical_constraint(cache_v, ("batch", "kv_seq", "kv_heads", None))
+
+    qg = q.reshape(b, 1, g, rep, hd)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) * (hd ** -0.5)
+    k_pos = jnp.arange(s_max)
+    valid = k_pos[None] <= cache_len[:, None]
+    if cfg.attn_window:
+        valid &= (positions[:, -1:] - k_pos[None]) < cfg.attn_window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bgrqd", w, cache_v.astype(jnp.float32))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, nh, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache_k, cache_v
+
+
+def cross_attention(cfg: ModelConfig, p, x, enc_out):
+    """Encoder-decoder cross attention (whisper), q-chunked: the encoder
+    context is short (1500 frames) but the decoder can be 32k, so scores
+    are materialized one q-block at a time."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g, rep = nkv, nh // nkv
+    b, sq = x.shape[0], x.shape[1]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def one_block(qb):                                # [b, ck, nh, hd]
+        qg = qb.reshape(b, qb.shape[1], g, rep, hd)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                       kf) * (hd ** -0.5)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bgrqk,bkgd->bgrqd", w, vf)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, qb.shape[1], nh, hd)
+
+    ck = _pick_chunk(sq, 512)
+    if ck == sq:
+        out = one_block(q)
+    else:
+        qc = q.reshape(b, sq // ck, ck, nh, hd).swapaxes(0, 1)
+        out = jax.lax.map(one_block, qc).swapaxes(0, 1).reshape(b, sq, nh, hd)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    if cfg.act == "swiglu":
+        return {
+            "wi": (jax.random.normal(ks[0], (d, f)) * s_in).astype(dt),
+            "wg": (jax.random.normal(ks[1], (d, f)) * s_in).astype(dt),
+            "wo": (jax.random.normal(ks[2], (f, d)) * s_out).astype(dt),
+        }
+    return {
+        "wi": (jax.random.normal(ks[0], (d, f)) * s_in).astype(dt),
+        "wo": (jax.random.normal(ks[2], (f, d)) * s_out).astype(dt),
+    }
+
+
+def mlp(cfg: ModelConfig, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = logical_constraint(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def init_embed(cfg: ModelConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "tok": (jax.random.normal(key, (cfg.vocab_padded, cfg.d_model))
+                * cfg.d_model ** -0.5).astype(dt)
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_padded))
+            * cfg.d_model ** -0.5).astype(dt)
+    return p
+
+
+def embed(cfg: ModelConfig, p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["tok"])
+    return jnp.einsum("bsd,dv->bsv", x, p["head"])

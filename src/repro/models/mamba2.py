@@ -1,0 +1,181 @@
+"""Mamba-2 SSD layer (state-space duality, arXiv:2405.21060), TPU-adapted.
+
+The chunked SSD algorithm is already the matmul formulation the MXU wants:
+within a chunk, the output is a masked [Q, Q] "attention" matmul; across
+chunks, a small recurrence over per-chunk states [H, P, N].  We implement
+exactly that: einsums for the intra-chunk quadratic part and chunk-state
+computation, one lax.scan over S/Q chunk states for the recurrence.
+
+Decode is the SSD recurrence specialized to one step: h <- da*h + dt*B x,
+y = C.h — constant state per layer ([B, H, P, N]), no KV growth, which is
+why mamba2/jamba run the long_500k cell (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.dist.sharding import logical_constraint
+
+
+def init_mamba(cfg: ModelConfig, key) -> dict:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt_ = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        # input projection -> [x (di), z gate (di), B (ns), C (ns), dt (nh)]
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di + 2 * ns + nh)) * s).astype(dt_),
+        "w_out": (jax.random.normal(ks[1], (di, d)) * di ** -0.5).astype(dt_),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, di + 2 * ns)) * 0.1
+                   ).astype(dt_),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    return {
+        "w_in": ("embed", "ssm_inner"),
+        "w_out": ("ssm_inner", "embed"),
+        "conv_w": ("conv", "ssm_inner"),
+        "A_log": ("state",),
+        "D": ("state",),
+        "dt_bias": ("state",),
+        "norm_scale": ("ssm_inner",),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    x = proj[..., :di]
+    z = proj[..., di:2 * di]
+    Bm = proj[..., 2 * di:2 * di + ns]
+    Cm = proj[..., 2 * di + ns:2 * di + 2 * ns]
+    dt = proj[..., 2 * di + 2 * ns:]
+    return x, z, Bm, Cm, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv (kernel K) via shifted adds; shard-friendly.
+
+    x: [B, S, F]; w: [K, F].  state (decode): [B, K-1, F] trailing inputs.
+    """
+    k = w.shape[0]
+    if state is None:
+        out = x * w[-1]
+        for i in range(1, k):
+            shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+            out = out + shifted * w[-1 - i]
+        return out
+    hist = jnp.concatenate([state, x], axis=1)       # [B, K, F]
+    out = jnp.einsum("bkf,kf->bf", hist, w)[:, None]
+    return out, hist[:, 1:]
+
+
+def ssd_chunked(cfg: ModelConfig, xh, Bm, Cm, dt, A_log, D):
+    """Chunked SSD scan.
+
+    xh: [B, S, H, P]; Bm/Cm: [B, S, N]; dt: [B, S, H] (softplus'd).
+    Returns y: [B, S, H, P].
+    """
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, f"seq {s} % ssm_chunk {q} != 0"
+    c = s // q
+
+    # f32 throughout (explicit: callers/tests may run under jax x64)
+    A_log = A_log.astype(jnp.float32)
+    D = D.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    a = -jnp.exp(A_log)                              # [H], negative decay
+    dta = (dt * a[None, None, :]).reshape(b, c, q, h)
+    xc = xh.reshape(b, c, q, h, p).astype(jnp.float32)
+    Bc = Bm.reshape(b, c, q, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, c, q, n).astype(jnp.float32)
+    dtc = dt.reshape(b, c, q, h).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(hprev, inp):
+        """One chunk: intra-chunk quadratic part + inter-chunk state carry.
+        Everything [B, Q, ...]-shaped — the [Q, Q, H] decay gate only ever
+        exists for a single chunk (live memory O(S*Q), not O(S^2))."""
+        xq, Bq, Cq, dtq, daq = inp
+        seg = jnp.cumsum(daq, axis=1)                         # [B,Q,H]
+        decay = seg[:, :, None, :] - seg[:, None, :, :]       # [B,Q,Q,H]
+        # mask BEFORE exp: the upper triangle has decay > 0, exp overflows
+        # to inf, and inf * 0 in the VJP of where() poisons the gradient
+        gate = jnp.exp(jnp.where(causal[None, :, :, None], decay, -1e30))
+        cb = jnp.einsum("bin,bjn->bij", Cq, Bq)
+        y = jnp.einsum("bij,bijh,bjh,bjhp->bihp", cb, gate, dtq, xq)
+        # inter-chunk contribution from the carried state
+        in_gate = jnp.exp(seg)                                # [B,Q,H]
+        y = y + jnp.einsum("bqn,bhnp,bqh->bqhp", Cq, hprev, in_gate)
+        # new chunk state
+        last = seg[:, -1:, :]                                 # [B,1,H]
+        sgate = jnp.exp(last - seg)                           # [B,Q,H]
+        states = jnp.einsum("bqh,bqh,bqn,bqhp->bhnp", sgate, dtq, Bq, xq)
+        hnew = hprev * jnp.exp(last[:, 0])[:, :, None, None] + states
+        return hnew, y
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step, h0,
+        (xc.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1),
+         dtc.swapaxes(0, 1), dta.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    y = y + xh.astype(jnp.float32) * D[None, None, :, None]
+    return y
+
+
+def mamba_layer(cfg: ModelConfig, p, x):
+    """x: [B, S, d] -> [B, S, d] (training / prefill path)."""
+    b, s, _ = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    proj = logical_constraint(proj, ("batch", "seq", "ssm_inner"))
+    xi, z, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"]))
+    xi, Bm, Cm = (conv_out[..., :di], conv_out[..., di:di + ns],
+                  conv_out[..., di + ns:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xi.reshape(b, s, nh, hd)
+    y = ssd_chunked(cfg, xh, Bm, Cm, dt, p["A_log"], p["D"])
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y, p["norm_scale"])
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"])
+
+
+def mamba_decode(cfg: ModelConfig, p, x, ssm_state, conv_state):
+    """One decode step.  x: [B, 1, d]; ssm_state: [B, H, N, P];
+    conv_state: [B, K-1, di+2ns].  Returns (y, ssm_state, conv_state)."""
+    b = x.shape[0]
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xi, z, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)          # [B,1,F]
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bm, Cm = (conv_out[..., :di], conv_out[..., di:di + ns],
+                  conv_out[..., di + ns:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a[None])                                # [B,H]
+    xh = xi.reshape(b, nh, hd).astype(jnp.float32)
+    Bf = Bm[:, 0].astype(jnp.float32)                         # [B,N]
+    Cf = Cm[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, Bf, xh)
+    ssm_state = ssm_state * da[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cf, ssm_state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y, p["norm_scale"])
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), ssm_state, conv_state

@@ -1,0 +1,97 @@
+"""Unified model API: one entry point per (arch, step kind).
+
+  init_params(cfg, rng)               params pytree
+  param_specs(cfg)                    matching logical-axis names pytree
+  forward(cfg, params, batch)         logits + aux (train / prefill)
+  loss_fn(cfg, params, batch)         scalar loss (train)
+  decode_step(cfg, params, cache, t)  one-token serve step
+  cache_shapes / cache_specs          decode-state shapes + sharding names
+  input_specs(cfg, shape)             ShapeDtypeStructs for every input
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    if cfg.family == "encdec":
+        return E.init_encdec(cfg, rng)
+    return T.init_decoder(cfg, rng)
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.family == "encdec":
+        return E.encdec_specs(cfg)
+    return T.decoder_specs(cfg)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    if cfg.family == "encdec":
+        return E.encdec_forward(cfg, params, batch["frames"], batch["tokens"])
+    return T.decoder_forward(cfg, params, batch["tokens"])
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Next-token cross entropy (+ MoE aux) with f32 logits math."""
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    if cfg.family == "encdec":
+        return E.encdec_decode(cfg, params, cache, tokens)
+    return T.decoder_decode(cfg, params, cache, tokens)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, s_max: int):
+    if cfg.family == "encdec":
+        return E.encdec_cache_shapes(cfg, batch, s_max)
+    return T.init_cache_shapes(cfg, batch, s_max)
+
+
+def cache_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return E.encdec_cache_specs(cfg)
+    return T.cache_specs(cfg)
+
+
+def input_specs(cfg: ModelConfig, seq_len: int, batch: int,
+                kind: str = "train") -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    if kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        }
+        if kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    raise ValueError(kind)
+
+
+def input_spec_names(cfg: ModelConfig, kind: str = "train"):
+    names = {"tokens": ("batch", "seq") if kind != "decode" else ("batch", None)}
+    if kind == "train":
+        names["labels"] = ("batch", "seq")
+    if cfg.family == "encdec" and kind in ("train", "prefill"):
+        names["frames"] = ("batch", None, None)
+    return names

@@ -1,0 +1,340 @@
+"""Model assembly for all families: dense / moe / ssm / hybrid / vlm.
+
+One Block abstraction covers every layer: a mixer (attention | SSD) plus an
+FFN (dense | MoE | none).  Families differ only in how blocks are stacked:
+
+  dense, vlm        scan over L identical (attn, dense) blocks
+  moe (mixtral)     scan over L identical (attn, moe) blocks
+  moe (deepseek)    layer 0 unrolled (attn, wide dense), scan over the rest
+  ssm (mamba2)      scan over L (ssd, none) blocks
+  hybrid (jamba)    scan over L/8 super-blocks; inside: [attn, ssd x7] with
+                    MoE on odd sublayers (1:7 interleave, MoE every 2)
+
+Scan-over-layers keeps HLO size O(1) in depth — the only workable compile
+strategy at 64-72 layers x 512 devices (DESIGN.md §5).  Remat policy per
+config: none | dots | full.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import mamba2 as S
+from repro.models.config import ModelConfig
+from repro.dist.sharding import logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+def init_block(cfg: ModelConfig, key, mixer: str, ffn: str,
+               d_ff: int = 0) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": L.init_norm(cfg, cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = L.init_attention(cfg, k1)
+    else:
+        p["ssm"] = S.init_mamba(cfg, k1)
+    if ffn != "none":
+        p["norm2"] = L.init_norm(cfg, cfg.d_model)
+    if ffn == "dense":
+        p["mlp"] = L.init_mlp(cfg, k2, d_ff or cfg.d_ff)
+    elif ffn == "moe":
+        p["moe"] = M.init_moe(cfg, k2)
+    return p
+
+
+def block_specs(cfg: ModelConfig, mixer: str, ffn: str) -> Dict[str, Any]:
+    norm = {"scale": ("embed",)}
+    if cfg.norm == "layernorm":
+        norm = {"scale": ("embed",), "bias": ("embed",)}
+    p: Dict[str, Any] = {"norm1": dict(norm)}
+    if mixer == "attn":
+        attn = {
+            "wq": ("embed", "heads", "head_dim"),
+            "wk": ("embed", "kv_heads", "head_dim"),
+            "wv": ("embed", "kv_heads", "head_dim"),
+            "wo": ("heads", "head_dim", "embed"),
+        }
+        if cfg.qkv_bias:
+            attn.update(bq=("heads", "head_dim"), bk=("kv_heads", "head_dim"),
+                        bv=("kv_heads", "head_dim"))
+        if cfg.qk_norm:
+            attn.update(q_norm=(None,), k_norm=(None,))
+        p["attn"] = attn
+    else:
+        p["ssm"] = S.mamba_specs(cfg)
+    if ffn != "none":
+        p["norm2"] = dict(norm)
+    if ffn == "dense":
+        mlp = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+        if cfg.act == "swiglu":
+            mlp["wg"] = ("embed", "mlp")
+        p["mlp"] = mlp
+    elif ffn == "moe":
+        p["moe"] = M.moe_specs(cfg)
+    return p
+
+
+def apply_block(cfg: ModelConfig, p, x, positions, aux, mixer: str, ffn: str,
+                causal: bool = True):
+    h = L.norm(cfg, x, p["norm1"])
+    if mixer == "attn":
+        h = L.attention(cfg, p["attn"], h, positions, causal=causal)
+    else:
+        h = S.mamba_layer(cfg, p["ssm"], h)
+    x = x + h
+    if ffn == "none":
+        return x, aux
+    h = L.norm(cfg, x, p["norm2"])
+    if ffn == "dense":
+        h = L.mlp(cfg, p["mlp"], h)
+    else:
+        h, a = M.moe_ffn(cfg, p["moe"], h)
+        aux = aux + a
+    return x + h, aux
+
+
+def apply_block_decode(cfg: ModelConfig, p, x, positions, cache, mixer: str,
+                       ffn: str):
+    """cache: dict with the block's decode state; returns updated copy."""
+    h = L.norm(cfg, x, p["norm1"])
+    new_cache = dict(cache)
+    if mixer == "attn":
+        h, ck, cv = L.attention_kv(cfg, p["attn"], h, positions,
+                                   cache["k"], cache["v"], cache["len"])
+        new_cache.update(k=ck, v=cv)
+    else:
+        h, st, cs = S.mamba_decode(cfg, p["ssm"], h, cache["ssm"],
+                                   cache["conv"])
+        new_cache.update(ssm=st, conv=cs)
+    x = x + h
+    if ffn != "none":
+        h = L.norm(cfg, x, p["norm2"])
+        if ffn == "dense":
+            h = L.mlp(cfg, p["mlp"], h)
+        else:
+            h, _ = M.moe_ffn(cfg, p["moe"], h)
+        x = x + h
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack plans: how each family composes blocks
+# ---------------------------------------------------------------------------
+def stack_plan(cfg: ModelConfig):
+    """Returns (prologue, scan_unit, n_scan):
+    prologue: list of (mixer, ffn, d_ff) unrolled before the scan;
+    scan_unit: list of (mixer, ffn, d_ff) repeated n_scan times via lax.scan.
+    """
+    if cfg.family == "ssm":
+        return [], [("ssm", "none", 0)], cfg.n_layers
+    if cfg.hybrid_period:
+        unit = []
+        for j in range(cfg.hybrid_period):
+            mixer = "attn" if j == 0 else "ssm"
+            ffn = "moe" if cfg.is_moe_layer(j) else "dense"
+            unit.append((mixer, ffn, 0))
+        assert cfg.n_layers % cfg.hybrid_period == 0
+        return [], unit, cfg.n_layers // cfg.hybrid_period
+    if cfg.n_experts and cfg.dense_first_layer:
+        return ([("attn", "dense", cfg.dense_first_d_ff)],
+                [("attn", "moe", 0)], cfg.n_layers - 1)
+    if cfg.n_experts:
+        return [], [("attn", "moe", 0)], cfg.n_layers
+    return [], [("attn", "dense", 0)], cfg.n_layers
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+# ---------------------------------------------------------------------------
+# init / specs for the whole decoder stack
+# ---------------------------------------------------------------------------
+def init_decoder(cfg: ModelConfig, key) -> Dict[str, Any]:
+    pro, unit, n_scan = stack_plan(cfg)
+    params: Dict[str, Any] = {"embed": L.init_embed(cfg, jax.random.fold_in(key, 0))}
+    for i, (mixer, ffn, dff) in enumerate(pro):
+        params[f"pro{i}"] = init_block(cfg, jax.random.fold_in(key, 100 + i),
+                                       mixer, ffn, dff)
+
+    def init_unit(k):
+        ks = jax.random.split(k, len(unit))
+        return {f"sub{j}": init_block(cfg, ks[j], m, f, dff)
+                for j, (m, f, dff) in enumerate(unit)}
+
+    keys = jax.random.split(jax.random.fold_in(key, 1), n_scan)
+    params["blocks"] = jax.vmap(init_unit)(keys)
+    params["final_norm"] = L.init_norm(cfg, cfg.d_model)
+    return params
+
+
+def decoder_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    pro, unit, _ = stack_plan(cfg)
+    emb = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        emb["head"] = ("embed", "vocab")
+    specs: Dict[str, Any] = {"embed": emb}
+    for i, (mixer, ffn, _) in enumerate(pro):
+        specs[f"pro{i}"] = block_specs(cfg, mixer, ffn)
+
+    def add_layer_dim(tree):
+        return jax.tree.map(
+            lambda names: ("layers",) + names, tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    specs["blocks"] = {
+        f"sub{j}": add_layer_dim(block_specs(cfg, m, f))
+        for j, (m, f, _) in enumerate(unit)}
+    norm = {"scale": ("embed",)}
+    if cfg.norm == "layernorm":
+        norm["bias"] = ("embed",)
+    specs["final_norm"] = norm
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def decoder_forward(cfg: ModelConfig, params, tokens, causal: bool = True):
+    """tokens [B, S] -> (logits [B, S, V], aux loss scalar)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = L.embed(cfg, params["embed"], tokens)
+    x = logical_constraint(x, ("batch", "seq", None))
+    aux = jnp.zeros((), jnp.float32)
+
+    pro, unit, n_scan = stack_plan(cfg)
+    for i, (mixer, ffn, _) in enumerate(pro):
+        x, aux = apply_block(cfg, params[f"pro{i}"], x, positions, aux,
+                             mixer, ffn, causal)
+
+    def unit_body(carry, unit_params):
+        x, aux = carry
+        for j, (mixer, ffn, _) in enumerate(unit):
+            x, aux = apply_block(cfg, unit_params[f"sub{j}"], x, positions,
+                                 aux, mixer, ffn, causal)
+        return (x, aux), None
+
+    body = _remat(cfg, unit_body)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+    else:
+        for i in range(n_scan):
+            unit_params = jax.tree.map(lambda a: a[i], params["blocks"])
+            (x, aux), _ = body((x, aux), unit_params)
+
+    x = L.norm(cfg, x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)
+    logits = logical_constraint(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, full cache)
+# ---------------------------------------------------------------------------
+def init_cache_shapes(cfg: ModelConfig, batch: int, s_max: int):
+    """ShapeDtypeStructs for the decode cache (used by dryrun/serving)."""
+    pro, unit, n_scan = stack_plan(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    kv = (batch, s_max, cfg.n_kv_heads, cfg.hd)
+    ssm = (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim)
+    conv = (batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state)
+
+    def unit_cache(stack: int):
+        out = {}
+        for j, (mixer, _, _) in enumerate(unit):
+            if mixer == "attn":
+                out[f"sub{j}"] = {
+                    "k": jax.ShapeDtypeStruct((stack,) + kv, dt),
+                    "v": jax.ShapeDtypeStruct((stack,) + kv, dt),
+                }
+            else:
+                out[f"sub{j}"] = {
+                    "ssm": jax.ShapeDtypeStruct((stack,) + ssm, jnp.float32),
+                    "conv": jax.ShapeDtypeStruct((stack,) + conv, dt),
+                }
+        return out
+
+    cache = {"blocks": unit_cache(n_scan),
+             "len": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+    for i, (mixer, _, _) in enumerate(pro):
+        cache[f"pro{i}"] = (
+            {"k": jax.ShapeDtypeStruct(kv, dt), "v": jax.ShapeDtypeStruct(kv, dt)}
+            if mixer == "attn" else
+            {"ssm": jax.ShapeDtypeStruct(ssm, jnp.float32),
+             "conv": jax.ShapeDtypeStruct(conv, dt)})
+    return cache
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical-axis names for the decode cache (kv_seq gives SP decode)."""
+    pro, unit, _ = stack_plan(cfg)
+    kv = ("batch", "kv_seq", "kv_heads", None)
+    ssm = ("batch", "heads", None, None)
+    conv = ("batch", None, "ssm_inner")
+
+    def unit_spec(prefix):
+        out = {}
+        for j, (mixer, _, _) in enumerate(unit):
+            if mixer == "attn":
+                out[f"sub{j}"] = {"k": prefix + kv, "v": prefix + kv}
+            else:
+                out[f"sub{j}"] = {"ssm": prefix + ssm, "conv": prefix + conv}
+        return out
+
+    cache = {"blocks": unit_spec(("layers",)), "len": (None,)}
+    for i, (mixer, _, _) in enumerate(pro):
+        cache[f"pro{i}"] = ({"k": kv, "v": kv} if mixer == "attn"
+                            else {"ssm": ssm, "conv": conv})
+    return cache
+
+
+def decoder_decode(cfg: ModelConfig, params, cache, tokens):
+    """One decode step.  tokens [B, 1]; returns (logits [B, V], new cache)."""
+    b = tokens.shape[0]
+    positions = cache["len"][:, None]
+    x = L.embed(cfg, params["embed"], tokens)
+    pro, unit, n_scan = stack_plan(cfg)
+    new_cache = dict(cache)
+
+    for i, (mixer, ffn, _) in enumerate(pro):
+        c = dict(cache[f"pro{i}"])
+        c["len"] = cache["len"]
+        x, c = apply_block_decode(cfg, params[f"pro{i}"], x, positions, c,
+                                  mixer, ffn)
+        c.pop("len")
+        new_cache[f"pro{i}"] = c
+
+    def unit_body(x, scanned):
+        unit_params, unit_cache = scanned
+        new_unit_cache = {}
+        for j, (mixer, ffn, _) in enumerate(unit):
+            c = dict(unit_cache[f"sub{j}"])
+            c["len"] = cache["len"]
+            x, c = apply_block_decode(cfg, unit_params[f"sub{j}"], x,
+                                      positions, c, mixer, ffn)
+            c.pop("len")
+            new_unit_cache[f"sub{j}"] = c
+        return x, new_unit_cache
+
+    x, new_blocks = jax.lax.scan(unit_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = new_blocks
+    new_cache["len"] = cache["len"] + 1
+
+    x = L.norm(cfg, x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,1 @@
+"""Serving: paged KV cache with learned-index page lookup + batch engine."""

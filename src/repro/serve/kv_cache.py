@@ -1,0 +1,147 @@
+"""Paged KV cache with a learned-index page table (the end-to-end
+integration the paper's conclusion calls for).
+
+vLLM-style layout: the cache is a pool of fixed-size pages; each sequence
+owns a scattered page list.  Two sorted-array lookups appear on the hot
+path, and both are the paper's §2 operation:
+
+  1. flat-slot -> request id: continuous batching packs all live tokens
+     into one flat buffer; request boundaries are the cumulative lengths,
+     so the mapping is upper_bound(cum_lens, slot).  Served by a LINEAR
+     learned model + verified fixup window (the ids' CDF is near-linear by
+     construction — the scheduler balances lengths), falling back to the
+     tiled bounded_search kernel for the fixup.
+  2. logical page -> physical page: a gather through the block table.
+
+Host-side allocation (free list, fragmentation) is numpy; device-side
+lookup is jit-compatible int32 math (no x64 needed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.bounded_search.ops import lower_bound_windows
+
+
+@dataclasses.dataclass
+class PageAllocator:
+    """Host-side page pool: O(1) alloc/free via a free list."""
+
+    n_pages: int
+    page_size: int
+
+    def __post_init__(self):
+        self.free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self.owner: Dict[int, int] = {}
+
+    def alloc(self, seq_id: int, n: int = 1) -> List[int]:
+        if len(self.free) < n:
+            raise MemoryError(f"KV pool exhausted ({n} pages requested, "
+                              f"{len(self.free)} free)")
+        pages = [self.free.pop() for _ in range(n)]
+        for p in pages:
+            self.owner[p] = seq_id
+        return pages
+
+    def release(self, pages: List[int]):
+        for p in pages:
+            self.owner.pop(p, None)
+            self.free.append(p)
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.n_pages
+
+
+class LearnedSlotIndex:
+    """flat token slot -> request id via a learned linear CDF model.
+
+    Build: fit slope/intercept over (cum_lens, request ids) and VERIFY the
+    worst-case error (same recipe as the RMI error tables: the bound is
+    checked, not assumed).  Lookup: predict + fixup window lower-bound.
+    """
+
+    def __init__(self, cum_lens: np.ndarray):
+        # cum_lens[i] = first flat slot of request i; last entry = total.
+        self.cum = np.asarray(cum_lens, np.int64)
+        n_req = len(self.cum) - 1
+        total = max(int(self.cum[-1]), 1)
+        self.slope = n_req / total
+        # verified max error of the linear model at the boundaries
+        pred = self.cum[:-1] * self.slope
+        self.err = int(np.ceil(np.abs(pred - np.arange(n_req)).max())) + 1 \
+            if n_req else 1
+        self.n_req = n_req
+
+    def lookup(self, slots):
+        """slots: jnp int32 [m] -> request ids (jit-compatible)."""
+        pred = (slots.astype(jnp.float32) * jnp.float32(self.slope))
+        lo = jnp.clip(pred.astype(jnp.int32) - self.err, 0, self.n_req)
+        cum = jnp.asarray(self.cum, jnp.int32)
+        # upper_bound(cum, slot) - 1 == request id; reuse the tiled kernel
+        # contract via its exact fallback (windows are tiny here).
+        ub = lower_bound_windows(
+            cum, slots.astype(jnp.int32) + 1, lo,
+            max_width=2 * self.err + 2)
+        return jnp.clip(ub - 1, 0, self.n_req - 1)
+
+
+class PagedKVCache:
+    """Block-table bookkeeping for one layer stack.
+
+    Physical store: [n_pages, page_size, n_kv, hd] per k/v per layer
+    (device); here we manage the table + allocator, the engine owns the
+    buffers.  ``gather_spec`` produces the int32 indices a decode step
+    needs to address scattered pages as if contiguous.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, max_seqs: int,
+                 max_pages_per_seq: int):
+        self.alloc = PageAllocator(n_pages, page_size)
+        self.page_size = page_size
+        self.table = np.full((max_seqs, max_pages_per_seq), -1, np.int32)
+        self.lens = np.zeros((max_seqs,), np.int32)
+        self.pages: Dict[int, List[int]] = {}
+
+    def add_sequence(self, seq_id: int, n_tokens: int):
+        n_pages = -(-n_tokens // self.page_size)
+        pages = self.alloc.alloc(seq_id, n_pages)
+        self.pages[seq_id] = pages
+        self.table[seq_id, :n_pages] = pages
+        self.lens[seq_id] = n_tokens
+
+    def append_token(self, seq_id: int):
+        n = int(self.lens[seq_id])
+        if n % self.page_size == 0:  # page boundary: grow
+            new = self.alloc.alloc(seq_id, 1)[0]
+            self.pages[seq_id].append(new)
+            self.table[seq_id, n // self.page_size] = new
+        self.lens[seq_id] = n + 1
+
+    def free_sequence(self, seq_id: int):
+        self.alloc.release(self.pages.pop(seq_id, []))
+        self.table[seq_id] = -1
+        self.lens[seq_id] = 0
+
+    def gather_spec(self, seq_ids: np.ndarray):
+        """For each seq: physical slot of every logical position.
+
+        Returns int32 [len(seq_ids), max_len] flat indices into the page
+        pool (page * page_size + offset), -1 past each length."""
+        max_len = int(self.lens[seq_ids].max()) if len(seq_ids) else 0
+        out = np.full((len(seq_ids), max(max_len, 1)), -1, np.int32)
+        for r, sid in enumerate(seq_ids):
+            n = int(self.lens[sid])
+            logical = np.arange(n)
+            phys_page = self.table[sid, logical // self.page_size]
+            out[r, :n] = phys_page * self.page_size + logical % self.page_size
+        return out
+
+    def slot_index(self) -> LearnedSlotIndex:
+        live = np.flatnonzero(self.lens > 0)
+        cum = np.concatenate([[0], np.cumsum(self.lens[live])])
+        return LearnedSlotIndex(cum)

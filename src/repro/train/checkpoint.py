@@ -1,0 +1,120 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout (one directory per step):
+
+  ckpt_dir/step_000123.tmp/        written first
+    manifest.json                  step, mesh shape, tree structure, shapes
+    shard_<k>.npz                  one file per host (here: one), arrays
+                                   saved UNSHARDED-equivalent (gathered)
+  ckpt_dir/step_000123/            atomic rename after fsync -> commit
+
+Restore re-shards onto WHATEVER mesh is active — a checkpoint written on
+(2,16,16) restores onto (16,16) after losing a pod (elastic scaling); the
+values are mesh-independent, sharding is re-derived from the logical rules.
+Writes run on a background thread (training never blocks on disk).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    vals = [v for _, v in flat]
+    return keys, vals, treedef
+
+
+def _to_savable(a: np.ndarray):
+    """numpy can't serialize ml_dtypes (bf16 etc.) — view as uint bits."""
+    if a.dtype.kind == "V" or a.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                               "float8_e5m2"):
+        return a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8), \
+            a.dtype.name
+    return a, a.dtype.name
+
+
+def _from_savable(a: np.ndarray, dtype_name: str):
+    if a.dtype.name != dtype_name:
+        import ml_dtypes
+
+        return a.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return a
+
+
+def save(ckpt_dir: str, step: int, state, extra: Optional[dict] = None,
+         async_: bool = True):
+    """Serialize `state` (pytree of arrays) at `step`."""
+    keys, vals, _ = _flatten_with_paths(state)
+    # gather to host (device_get handles sharded arrays)
+    host_vals = [np.asarray(jax.device_get(v)) for v in vals]
+    host_vals, dtype_names = zip(*[_to_savable(v) for v in host_vals]) \
+        if host_vals else ((), ())
+
+    def write():
+        tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "shard_0.npz"),
+                 **{k: v for k, v in zip(keys, host_vals)})
+        manifest = {
+            "step": step,
+            "keys": keys,
+            "shapes": [list(v.shape) for v in host_vals],
+            "dtypes": list(dtype_names),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic commit
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None):
+    """Load into the structure of `like` (pytree of arrays or SDS).
+
+    `shardings`: optional matching tree of NamedSharding for the ACTIVE
+    mesh — this is the elastic path: values are put onto the new mesh
+    regardless of what mesh wrote them.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    keys, vals, treedef = _flatten_with_paths(like)
+    assert keys == manifest["keys"], "checkpoint/tree structure mismatch"
+    loaded = [_from_savable(data[k], dn)
+              for k, dn in zip(keys, manifest["dtypes"])]
+    if shardings is not None:
+        _, shard_flat, _ = _flatten_with_paths(shardings)
+        loaded = [jax.device_put(v, s) for v, s in zip(loaded, shard_flat)]
+    else:
+        loaded = [jax.numpy.asarray(v) for v in loaded]
+    return jax.tree_util.tree_unflatten(treedef, loaded)

@@ -1,0 +1,87 @@
+"""Train step: loss -> grads -> AdamW, with microbatch accumulation.
+
+The step is written in global (pjit) semantics: XLA SPMD inserts the
+all-gathers for FSDP params and the reduce-scatters for data-parallel
+gradients from the sharding annotations alone.  Microbatch accumulation
+(for the train_4k cells whose per-device activation footprint would not
+fit otherwise) is a lax.scan over microbatches accumulating f32 grads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train.optimizer import AdamW, AdamWState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+    def tree_flatten(self):
+        return (self.params, self.opt), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda aux, leaves: TrainState(*leaves),
+)
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch))(params)
+        return loss, grads
+
+    def step(state: TrainState, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(state.params, batch)
+        else:
+            def reshape_mb(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(reshape_mb, batch)
+
+            def acc_fn(carry, mb_batch):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(state.params, mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros(()), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        params, opt_state, gnorm = opt.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt.lr(opt_state.step)}
+        return TrainState(params, opt_state), metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return M.loss_fn(cfg, params, batch)
+
+    return eval_step

@@ -1,0 +1,101 @@
+"""Paper-§2 validity: every index must bound LB(x) for EVERY integer query.
+
+Property-based (hypothesis) over adversarial key distributions + the four
+SOSD surrogates; end-to-end exactness through each last-mile search.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import base, validate
+from repro.data import sosd
+
+INDEX_CONFIGS = [
+    ("rmi", dict(branching=64)),
+    ("rmi", dict(branching=4096)),
+    ("rmi", dict(branching=512, stage1="cubic")),
+    ("pgm", dict(eps=16)),
+    ("pgm", dict(eps=128)),
+    ("radix_spline", dict(eps=16, radix_bits=12)),
+    ("btree", dict(sample=8)),
+    ("ibtree", dict(sample=8)),
+    ("rbs", dict(radix_bits=10)),
+    ("binary_search", dict()),
+]
+
+
+@pytest.mark.parametrize("name,hyper", INDEX_CONFIGS,
+                         ids=[f"{n}-{i}" for i, (n, _) in enumerate(INDEX_CONFIGS)])
+@pytest.mark.parametrize("ds", ["amzn", "face", "osm", "wiki"])
+def test_bounds_valid_on_sosd(datasets, queries, ds, name, hyper):
+    keys = datasets[ds]
+    q = queries[ds]
+    b = base.REGISTRY[name](keys, **hyper)
+    r = validate.check_bounds(b, keys, q)
+    assert r["valid"], (ds, name, hyper, r)
+
+
+@pytest.mark.parametrize("name,hyper", INDEX_CONFIGS[:7],
+                         ids=[f"{n}-{i}" for i, (n, _) in enumerate(INDEX_CONFIGS[:7])])
+def test_end_to_end_exact(datasets, queries, name, hyper):
+    keys = datasets["wiki"]
+    q = queries["wiki"]
+    b = base.REGISTRY[name](keys, **hyper)
+    for lm in ("binary", "interpolation"):
+        r = validate.check_end_to_end(b, keys, q, last_mile=lm)
+        assert r["exact"], (name, lm, r)
+
+
+@st.composite
+def key_arrays(draw):
+    """Adversarial key sets: clusters, gaps, near-duplicates, outliers."""
+    n = draw(st.integers(64, 512))
+    style = draw(st.sampled_from(["uniform", "clustered", "outliers", "dense"]))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    if style == "uniform":
+        raw = rng.integers(0, 2**62, n, dtype=np.uint64)
+    elif style == "clustered":
+        centers = rng.integers(0, 2**50, 5, dtype=np.uint64)
+        raw = (centers[rng.integers(0, 5, n)]
+               + rng.integers(0, 1000, n).astype(np.uint64))
+    elif style == "outliers":
+        raw = rng.integers(0, 2**30, n, dtype=np.uint64)
+        raw[: max(1, n // 100)] = rng.integers(
+            2**60, 2**63, max(1, n // 100), dtype=np.uint64)
+    else:
+        raw = np.arange(n, dtype=np.uint64) * 2 + 10
+    keys = np.unique(raw)
+    return keys if len(keys) >= 16 else np.unique(
+        np.arange(32, dtype=np.uint64) * 7)
+
+
+@pytest.mark.parametrize("name,hyper", [
+    ("rmi", dict(branching=32)),
+    ("pgm", dict(eps=8, top_cutoff=8)),
+    ("radix_spline", dict(eps=8, radix_bits=8)),
+    ("btree", dict(sample=4)),
+    ("rbs", dict(radix_bits=6)),
+])
+@settings(max_examples=25, deadline=None)
+@given(keys=key_arrays(), seed=st.integers(0, 2**31))
+def test_property_validity(name, hyper, keys, seed):
+    rng = np.random.default_rng(seed)
+    present = keys[rng.integers(0, len(keys), 64)]
+    absent = rng.integers(0, 2**63, 64, dtype=np.uint64)
+    edge = np.array([0, 1, keys[0], keys[-1],
+                     np.uint64(2**64 - 1)], np.uint64)
+    q = np.concatenate([present, absent, edge])
+    b = base.REGISTRY[name](keys, **hyper)
+    r = validate.check_bounds(b, keys, q)
+    assert r["valid"], (name, r["n_bad"], r["bad_idx"])
+    e = validate.check_end_to_end(b, keys, q)
+    assert e["exact"], (name, e)
+
+
+def test_binary_search_is_reference(datasets, queries):
+    keys = datasets["amzn"]
+    q = queries["amzn"]
+    b = base.REGISTRY["binary_search"](keys)
+    assert b.size_bytes == 0
+    r = validate.check_end_to_end(b, keys, q)
+    assert r["exact"]

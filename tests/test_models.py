@@ -1,0 +1,148 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions, decode-step consistency, spec-tree sync."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+from repro.configs import ARCHS, SHAPES, SKIPS, get_smoke
+from repro.models import model as M
+
+ALL = list(ARCHS)
+
+
+def _batch(cfg, b=2, s=64):
+    out = {"tokens": jnp.ones((b, s), jnp.int32),
+           "labels": jnp.ones((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = jnp.zeros((b, cfg.encoder_seq, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = M.forward(cfg, params, batch)
+    assert logits.shape == (2, 64, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss = M.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_smoke_grad_step(arch):
+    cfg = get_smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(cfg, p, batch))(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    total = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in leaves)
+    assert total > 0.0, "gradients must be non-trivial"
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cache_sh = M.cache_shapes(cfg, batch=2, s_max=96)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sh)
+    logits, cache2 = M.decode_step(cfg, params, cache,
+                                   jnp.ones((2, 1), jnp.int32))
+    assert logits.shape == (2, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(cache2["len"][0]) == 1
+    # step again with the updated cache
+    logits3, cache3 = M.decode_step(cfg, params, cache2,
+                                    jnp.ones((2, 1), jnp.int32))
+    assert int(cache3["len"][0]) == 2
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_param_spec_tree_matches(arch):
+    """param_specs must mirror init_params structurally (sharding relies
+    on it); same for cache specs."""
+    cfg = get_smoke(arch)
+    shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = M.param_specs(cfg)
+    is_names = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    s1 = jtu.tree_structure(jax.tree.map(lambda x: 0, shapes))
+    s2 = jtu.tree_structure(jtu.tree_map(lambda x: 0, specs, is_leaf=is_names))
+    assert s1 == s2
+    # every spec tuple has the same rank as its array
+    flat_shapes = jtu.tree_leaves_with_path(shapes)
+    flat_specs = {jtu.keystr(p): v for p, v in
+                  jtu.tree_leaves_with_path(specs, is_leaf=is_names)}
+    for path, sds in flat_shapes:
+        names = flat_specs[jtu.keystr(path)]
+        assert len(names) == len(sds.shape), (jtu.keystr(path), names, sds.shape)
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_cache_spec_tree_matches(arch):
+    cfg = get_smoke(arch)
+    shapes = M.cache_shapes(cfg, batch=2, s_max=32)
+    specs = M.cache_specs(cfg)
+    is_names = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    s1 = jtu.tree_structure(jax.tree.map(lambda x: 0, shapes))
+    s2 = jtu.tree_structure(jtu.tree_map(lambda x: 0, specs, is_leaf=is_names))
+    assert s1 == s2
+
+
+def test_exact_configs_match_assignment():
+    """The full configs must carry the exact assigned hyperparameters."""
+    expect = {
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "mamba2-2.7b": (64, 2560, 1, 1, 0, 50280),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+    }
+    for name, (L, d, h, kv, ff, v) in expect.items():
+        cfg = ARCHS[name]
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v), name
+    # MoE structure
+    assert ARCHS["deepseek-moe-16b"].n_experts == 64
+    assert ARCHS["deepseek-moe-16b"].top_k == 6
+    assert ARCHS["deepseek-moe-16b"].n_shared_experts == 2
+    assert ARCHS["mixtral-8x22b"].n_experts == 8
+    assert ARCHS["mixtral-8x22b"].top_k == 2
+    assert ARCHS["jamba-1.5-large-398b"].n_experts == 16
+    assert ARCHS["jamba-1.5-large-398b"].hybrid_period == 8
+    assert ARCHS["mamba2-2.7b"].ssm_state == 128
+
+
+def test_shape_table_and_skips():
+    assert SHAPES["train_4k"] == (4096, 256, "train")
+    assert SHAPES["prefill_32k"] == (32768, 32, "prefill")
+    assert SHAPES["decode_32k"] == (32768, 128, "decode")
+    assert SHAPES["long_500k"] == (524288, 1, "decode")
+    assert ("granite-3-2b", "long_500k") in SKIPS
+    assert ("mamba2-2.7b", "long_500k") not in SKIPS
+    assert ("jamba-1.5-large-398b", "long_500k") not in SKIPS
+
+
+def test_param_counts_match_published():
+    tol = {"granite-3-2b": (2.5e9, 0.05), "qwen1.5-32b": (32e9, 0.12),
+           "command-r-plus-104b": (104e9, 0.05), "mamba2-2.7b": (2.7e9, 0.05),
+           "jamba-1.5-large-398b": (398e9, 0.03),
+           "deepseek-moe-16b": (16.4e9, 0.03), "mixtral-8x22b": (141e9, 0.03),
+           "chameleon-34b": (34e9, 0.03)}
+    for name, (n, rel) in tol.items():
+        got = ARCHS[name].param_count()
+        assert abs(got - n) / n < rel, (name, got, n)

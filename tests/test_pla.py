@@ -1,0 +1,60 @@
+"""Error guarantees of the PLA builders (PGM cone / RS spline)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import _pla
+
+
+def _eval_cone(ax, ay, sl, x):
+    seg = np.clip(np.searchsorted(ax, x, side="right") - 1, 0, len(ax) - 1)
+    return ay[seg] + sl[seg] * (x - ax[seg])
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(32, 800), eps=st.sampled_from([2, 8, 32]),
+       seed=st.integers(0, 2**31))
+def test_shrinking_cone_error_bound(n, eps, seed):
+    rng = np.random.default_rng(seed)
+    x = np.unique(rng.integers(0, 2**52, n, dtype=np.uint64)).astype(np.float64)
+    y = np.arange(len(x), dtype=np.float64)
+    ax, ay, sl = _pla.shrinking_cone(x, y, float(eps))
+    pred = _eval_cone(ax, ay, sl, x)
+    assert np.abs(pred - y).max() <= eps + 1e-6
+    assert (sl >= 0).all()
+    assert (np.diff(ax) > 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(32, 800), eps=st.sampled_from([2, 8, 32]),
+       seed=st.integers(0, 2**31))
+def test_greedy_spline_error_bound(n, eps, seed):
+    rng = np.random.default_rng(seed)
+    x = np.unique(rng.integers(0, 2**52, n, dtype=np.uint64)).astype(np.float64)
+    y = np.arange(len(x), dtype=np.float64)
+    kx, ky = _pla.greedy_spline(x, y, float(eps))
+    # knots are data points, endpoints included
+    assert kx[0] == x[0] and kx[-1] == x[-1]
+    assert np.isin(kx, x).all()
+    # interpolation error <= eps at every data point
+    seg = np.clip(np.searchsorted(kx, x, side="right") - 1, 0, len(kx) - 2)
+    t = (x - kx[seg]) / np.maximum(kx[seg + 1] - kx[seg], 1e-30)
+    pred = ky[seg] + np.clip(t, 0, 1) * (ky[seg + 1] - ky[seg])
+    assert np.abs(pred - y).max() <= eps + 1e-6
+
+
+def test_group_rounded_spans():
+    x = np.array([1.0, 1.0, 1.0, 2.0, 3.0, 3.0])
+    y = np.arange(6.0)
+    xu, yf, span = _pla.group_rounded(x, y)
+    assert list(xu) == [1.0, 2.0, 3.0]
+    assert list(yf) == [0.0, 3.0, 4.0]
+    assert span == 2  # the three 1.0s span positions 0..2
+
+
+def test_cone_fewer_segments_with_larger_eps():
+    rng = np.random.default_rng(0)
+    x = np.sort(rng.uniform(0, 1e12, 5000))
+    y = np.arange(5000.0)
+    n_segs = [len(_pla.shrinking_cone(x, y, e)[0]) for e in (4, 32, 256)]
+    assert n_segs[0] >= n_segs[1] >= n_segs[2]
+    assert n_segs[2] >= 1

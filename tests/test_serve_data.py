@@ -1,0 +1,146 @@
+"""Serving (paged KV + engine) and data pipeline (packing) tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.serve.kv_cache import PageAllocator, PagedKVCache, LearnedSlotIndex
+from repro.serve.engine import ServeEngine
+from repro.data.packing import PackedIndex, pack_documents
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data import sosd
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache
+# ---------------------------------------------------------------------------
+def test_page_allocator_alloc_release():
+    a = PageAllocator(16, 8)
+    p1 = a.alloc(0, 5)
+    assert len(p1) == 5 and a.utilization == 5 / 16
+    a.release(p1)
+    assert a.utilization == 0.0
+    with pytest.raises(MemoryError):
+        a.alloc(1, 17)
+
+
+def test_paged_kv_table_and_gather():
+    kv = PagedKVCache(n_pages=32, page_size=4, max_seqs=4,
+                      max_pages_per_seq=8)
+    kv.add_sequence(0, 10)           # 3 pages
+    kv.add_sequence(1, 4)            # 1 page
+    for _ in range(5):
+        kv.append_token(1)           # crosses a page boundary
+    spec = kv.gather_spec(np.array([0, 1]))
+    assert spec.shape[0] == 2
+    # positions map to distinct physical slots
+    flat = spec[spec >= 0]
+    assert len(np.unique(flat)) == len(flat)
+    kv.free_sequence(0)
+    assert 0 not in kv.pages
+
+
+def test_learned_slot_index_exact():
+    rng = np.random.default_rng(0)
+    lens = rng.integers(1, 100, 50)
+    cum = np.concatenate([[0], np.cumsum(lens)])
+    idx = LearnedSlotIndex(cum)
+    slots = rng.integers(0, cum[-1], 500).astype(np.int32)
+    got = np.asarray(idx.lookup(jnp.asarray(slots)))
+    ref = np.searchsorted(cum, slots, side="right") - 1
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_serve_engine_generates():
+    cfg = get_smoke("granite-3-2b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=2, max_seq=64, page_size=8)
+    r1 = eng.submit([5, 6, 7], max_new=4)
+    r2 = eng.submit([9, 10], max_new=3)
+    outs = eng.run(max_steps=16)
+    assert len(outs[r1]) == 4
+    assert len(outs[r2]) == 3
+    assert all(0 <= t < cfg.vocab for t in outs[r1])
+    assert eng.kv.alloc.utilization == 0.0  # everything released
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_packed_index_matches_oracle():
+    rng = np.random.default_rng(3)
+    lens = rng.integers(1, 2000, 5000)
+    pi = PackedIndex(lens)
+    offsets = rng.integers(0, pi.total, 20_000)
+    d1, w1 = pi.locate(offsets)
+    d2, w2 = pi.locate_oracle(offsets)
+    np.testing.assert_array_equal(d1, d2)
+    np.testing.assert_array_equal(w1, w2)
+
+
+def test_pack_documents_rows():
+    docs = [[2, 3, 4], [5, 6], [7, 8, 9, 10, 11]]
+    rows = list(pack_documents(docs, seq_len=4, pad_id=0, eod_id=1))
+    flat = np.concatenate(rows)
+    # all tokens present, separators inserted, fixed-length rows
+    assert all(len(r) == 4 for r in rows)
+    for d in docs:
+        for t in d:
+            assert t in flat
+
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = PipelineConfig(vocab=100, seq_len=16, global_batch=4, seed=42)
+    p1 = TokenPipeline(cfg)
+    p2 = TokenPipeline(cfg)
+    b5a = p1.batch(5)
+    b5b = p2.batch(5)   # fresh pipeline, same step -> same batch
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    assert b5a["tokens"].shape == (4, 16)
+    assert (b5a["tokens"] >= 2).all() and (b5a["tokens"] < 100).all()
+    # next-token alignment
+    np.testing.assert_array_equal(p1.batch(0)["tokens"][:, 1:],
+                                  p1.batch(0)["labels"][:, :-1])
+
+
+def test_pipeline_host_sharding():
+    kw = dict(vocab=50, seq_len=8, global_batch=8, seed=1, n_hosts=2)
+    h0 = TokenPipeline(PipelineConfig(host_id=0, **kw))
+    h1 = TokenPipeline(PipelineConfig(host_id=1, **kw))
+    b0, b1 = h0.batch(3), h1.batch(3)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# SOSD surrogates
+# ---------------------------------------------------------------------------
+def test_sosd_generators_contract():
+    for name in sosd.DATASETS:
+        keys = sosd.generate(name, 20_000, seed=5)
+        assert len(keys) == 20_000
+        assert keys.dtype == np.uint64
+        assert (np.diff(keys.astype(np.float64)) > 0).all() or (
+            len(np.unique(keys)) == len(keys))
+        again = sosd.generate(name, 20_000, seed=5)
+        np.testing.assert_array_equal(keys, again)
+
+
+def test_sosd_face_has_outliers():
+    keys = sosd.generate("face", 20_000, seed=5)
+    assert keys[-1] > np.uint64(1) << np.uint64(59)
+    assert np.mean(keys < (np.uint64(1) << np.uint64(50))) > 0.99
+
+
+def test_sosd_osm_harder_than_wiki():
+    """The paper's osm pathology: more PLA segments at equal eps."""
+    from repro.core import _pla
+    osm = sosd.generate("osm", 30_000, seed=5)
+    wiki = sosd.generate("wiki", 30_000, seed=5)
+    n_osm = len(_pla.shrinking_cone(osm.astype(np.float64),
+                                    np.arange(30_000.0), 32.0)[0])
+    n_wiki = len(_pla.shrinking_cone(wiki.astype(np.float64),
+                                     np.arange(30_000.0), 32.0)[0])
+    assert n_osm > 2 * n_wiki, (n_osm, n_wiki)

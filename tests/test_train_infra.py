@@ -1,0 +1,240 @@
+"""Optimizer, train step, checkpoint, fault tolerance, compression, sharding."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.train.optimizer import AdamW, cosine_schedule, opt_state_specs
+from repro.train import train_step as TS
+from repro.train import checkpoint as CK
+from repro.train import fault_tolerance as FT
+from repro.dist import compression as GC
+from repro.dist.sharding import resolve_spec, ACT_RULES, PARAM_RULES
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# optimizer / train step
+# ---------------------------------------------------------------------------
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=lambda s: 0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw of w^2
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.int32(100))) < float(lr(jnp.int32(50)))
+    assert float(lr(jnp.int32(100))) >= 1e-4 - 1e-9  # floor
+
+
+def test_train_step_reduces_loss():
+    cfg = get_smoke("granite-3-2b")
+    opt = AdamW(lr=lambda s: 3e-3, weight_decay=0.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = TS.TrainState(params, opt.init(params))
+    step = jax.jit(TS.make_train_step(cfg, opt))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(2, cfg.vocab, (4, 64)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_microbatch_equivalence():
+    cfg = get_smoke("granite-3-2b")
+    opt = AdamW(lr=lambda s: 1e-3)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((4, 32), jnp.int32),
+             "labels": jnp.ones((4, 32), jnp.int32)}
+    s1 = TS.TrainState(params, opt.init(params))
+    s2 = TS.TrainState(params, opt.init(params))
+    st1, m1 = TS.make_train_step(cfg, opt, microbatches=1)(s1, batch)
+    st2, m2 = TS.make_train_step(cfg, opt, microbatches=2)(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    d = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        st1.params, st2.params)
+    assert max(jax.tree.leaves(d)) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_smoke("starcoder2-3b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(lr=cosine_schedule(1e-3, 5, 50))
+    state = TS.TrainState(params, opt.init(params))
+    t = CK.save(str(tmp_path), 7, state, extra={"mesh": [1]}, async_=True)
+    t.join()
+    assert CK.latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), state)
+    restored = CK.restore(str(tmp_path), 7, like)
+    same = jax.tree.map(
+        lambda a, b: np.array_equal(np.asarray(a), np.asarray(b)),
+        state, restored)
+    assert all(jax.tree.leaves(same))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A .tmp directory must never be picked up as a valid step."""
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert CK.latest_step(str(tmp_path)) is None
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+def test_heartbeat_classification():
+    led = FT.HeartbeatLedger(4, straggler_factor=2.0, dead_after=3)
+    for step in range(5):
+        for h in range(3):  # host 3 never beats
+            led.beat(h, step, now=float(step))
+    stragglers, dead = led.classify(5, now=5.0)
+    assert 3 in dead
+    # host 2 slows down
+    led.beat(0, 5, now=5.0)
+    led.beat(1, 5, now=5.0)
+    stragglers, dead = led.classify(5, now=9.0)
+    assert 2 in stragglers or 2 in dead
+
+
+def test_shrink_mesh_drops_pod_first():
+    shape, axes = FT.shrink_mesh_shape((2, 16, 16), ("pod", "data", "model"),
+                                       lost_hosts=4, hosts_per_pod=64)
+    assert shape == (1, 16, 16) and axes == ("pod", "data", "model")
+    shape, axes = FT.shrink_mesh_shape((16, 16), ("data", "model"),
+                                       lost_hosts=1, hosts_per_pod=64)
+    assert shape == (8, 16)
+
+
+def test_recovery_plan_scales_batch():
+    led = FT.HeartbeatLedger(4, dead_after=1)
+    for h in range(3):
+        led.beat(h, 10, now=1.0)
+    led.hosts[3].last_step = 5
+    plan = FT.plan_recovery(led, 10, (2, 16, 16), ("pod", "data", "model"),
+                            hosts_per_pod=2, ckpt_latest=100)
+    assert plan is not None
+    assert plan.restore_step == 100
+    assert plan.global_batch_scale == 2.0  # lost one of two pods
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+def test_quantize_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, 512).astype(np.float32))
+    err = jnp.zeros_like(x)
+    acc = jnp.zeros_like(x)
+    for _ in range(64):
+        c, err = GC.quantize(x, err)
+        acc = acc + GC.dequantize(c)
+    # error feedback: accumulated dequantized sum tracks 64*x closely
+    rel = float(jnp.linalg.norm(acc - 64 * x) / jnp.linalg.norm(64 * x))
+    assert rel < 0.01, rel
+
+
+def test_quantize_max_error_one_step():
+    x = jnp.asarray(np.linspace(-3, 3, 101, dtype=np.float32))
+    c, res = GC.quantize(x)
+    assert float(jnp.max(jnp.abs(res))) <= float(c.scale) / 2 + 1e-7
+    np.testing.assert_allclose(np.asarray(GC.dequantize(c) + res),
+                               np.asarray(x), rtol=1e-6, atol=1e-6)
+
+
+def test_compressed_psum_single_axis():
+    mesh = jax.make_mesh((1,), ("pod",))
+    out = jax.jit(
+        jax.shard_map,
+        static_argnums=(0,),
+    ) if False else None
+    f = jax.shard_map(
+        lambda x: GC.compressed_psum(x, "pod")[0],
+        mesh=mesh, in_specs=P(), out_specs=P())
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, 64).astype(np.float32))
+    got = f(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-2,
+                               atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+def test_resolve_spec_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # trivial mesh: axis size 1 -> everything replicated
+    spec = resolve_spec((24, 128), ("heads", "head_dim"), mesh, ACT_RULES)
+    assert spec == P(None, None)
+
+
+def test_resolve_spec_axis_reuse():
+    import jax as _j
+    if len(_j.devices()) < 1:
+        pytest.skip("no devices")
+    # simulated 16x16 resolution logic without building a 256-device mesh:
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = resolve_spec((256, 4096, 2048), ("batch", "seq", "embed"),
+                        FakeMesh(), ACT_RULES)
+    assert spec == P("data", None, None)
+    # starcoder2: 24 heads don't divide 16 -> head_dim picks up an axis
+    # (TP rules store FSDP on non-contraction dims: head_dim -> data first)
+    spec = resolve_spec((3072, 24, 128), ("embed", "heads", "head_dim"),
+                        FakeMesh(), PARAM_RULES)
+    assert spec == P(None, None, "data")
+    # mlp hidden: FSDP over (model, data) jointly
+    spec = resolve_spec((6144, 16384), ("embed", "mlp"), FakeMesh(),
+                        PARAM_RULES)
+    assert spec == P(None, ("model", "data"))
+    # deepseek experts divide; expert_fsdp falls through to data
+    spec = resolve_spec((64, 2048, 1408), ("experts", None, "expert_fsdp"),
+                        FakeMesh(), PARAM_RULES)
+    assert spec == P("model", None, "data")
+    # mixtral: experts don't divide; capacity TP takes model
+    spec = resolve_spec((16, 8, 20480, 6144),
+                        ("batch", "experts", "moe_cap_tp", None),
+                        FakeMesh(), ACT_RULES)
+    assert spec == P("data", None, "model", None)
+
+
+def test_fsdp_rules_seq_pickup():
+    """FSDP rule set: seq takes whatever the batch couldn't use."""
+    from repro.dist.sharding import FSDP_ACT_RULES
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    # train_4k: batch uses everything, seq unsharded
+    spec = resolve_spec((256, 4096), ("batch", "seq"), FakeMesh(),
+                        FSDP_ACT_RULES)
+    assert spec == P(("data", "model"), None)
+    # prefill_32k: batch 32 only fits data; seq picks up model (SP)
+    spec = resolve_spec((32, 32768), ("batch", "seq"), FakeMesh(),
+                        FSDP_ACT_RULES)
+    assert spec == P("data", "model")
+
+    class PodMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    # multi-pod train: batch 256 = data*model; seq takes the pod axis
+    spec = resolve_spec((256, 4096), ("batch", "seq"), PodMesh(),
+                        FSDP_ACT_RULES)
+    assert spec == P(("data", "model"), "pod")

@@ -38,8 +38,11 @@ _SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
 _COMP_NAME = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)")
 _CALLEE = re.compile(r"(?:body|to_apply|calls)=(%?[\w.\-]+)")
+_COND = re.compile(r"condition=(%?[\w.\-]+)")
 _COND_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
-_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_TRIP = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_INT_CONST = re.compile(r"^[su]\d+\[\]\s+constant\((\d+)\)")
+_COMPARE = re.compile(r"compare\((.*?)\),\s*direction=(LT|LE)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -74,6 +77,12 @@ class Computation:
         self.coll_counts: Dict[str, int] = {}
         # (callee, multiplier) — multiplier is the while trip count
         self.calls: List[Tuple[str, float]] = []
+        # scalar integer constants defined in this computation, and the
+        # loop bound recovered from a ROOT `compare(i, const), LT` — the
+        # trip-count source on XLA versions that don't annotate `while`
+        # with backend_config known_trip_count (counter starts at 0).
+        self.int_consts: Dict[str, int] = {}
+        self.cond_bound: Optional[float] = None
 
 
 def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
@@ -121,15 +130,35 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
             continue
         op = opm.group(1)
 
+        km = _INT_CONST.match(rhs)
+        if km:
+            cur.int_consts[result_name] = int(km.group(1))
+        if op == "compare":
+            pm = _COMPARE.search(rhs)
+            if pm:
+                for tok in re.findall(r"%?([\w.\-]+)", pm.group(1)):
+                    if tok in cur.int_consts:
+                        cur.cond_bound = float(
+                            cur.int_consts[tok]
+                            + (1 if pm.group(2) == "LE" else 0))
+
         if op == "dot":
             out_dims = _first_shape_dims(rtype) or []
             out_prod = 1
             for d in out_dims:
                 out_prod *= d
+            # lhs operand name; operands may be printed bare ("dot(x, y)")
+            # or typed ("dot(f32[64,256]{1,0} %x, ...)") depending on the
+            # XLA version — prefer the first %-token, fall back to bare.
             lhs_name = None
-            am = re.search(r"dot\((%?[\w.\-]+)", rhs)
+            am = re.search(r"dot\((.*)\)", rhs)
             if am:
-                lhs_name = am.group(1).lstrip("%")
+                pct = re.findall(r"%([\w.\-]+)", am.group(1))
+                if pct:
+                    lhs_name = pct[0]
+                else:
+                    bm = re.match(r"([\w.\-]+)", am.group(1))
+                    lhs_name = bm.group(1) if bm else None
             contract = 1
             cm = _CONTRACT.search(rhs)
             if cm and lhs_name and lhs_name in shapes:
@@ -154,6 +183,11 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
         if op == "while":
             tc = _TRIP.search(rhs)
             trip = float(tc.group(1)) if tc else 1.0
+            if tc is None:
+                cm = _COND.search(rhs)
+                cond = comps.get(cm.group(1).lstrip("%")) if cm else None
+                if cond is not None and cond.cond_bound is not None:
+                    trip = cond.cond_bound
             for cal in _CALLEE.findall(rhs):
                 cur.calls.append((cal.lstrip("%"), trip))
         elif op == "conditional":

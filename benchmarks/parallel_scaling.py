@@ -1,15 +1,31 @@
 """Paper Fig. 16 analogue: throughput under parallel load.
 
-The paper varies threads; a TPU varies (a) the query batch per dispatch
-and (b) the index size at fixed load (Fig. 16b).  Throughput here =
-lookups/second of the fused batched pipeline; the cache-miss-per-second
-proxy is bytes_touched * throughput.
+The paper varies threads; a TPU varies (a) the query batch per dispatch,
+(b) the index size at fixed load (Fig. 16b), and (c) the device count —
+queries sharded over a `data` mesh axis through repro.dist, every device
+running the fused lookup on its shard (DESIGN.md §7 change-log).
+Throughput = lookups/second of the fused batched pipeline; the
+cache-miss-per-second proxy is bytes_touched * throughput.
+
+Mode (c) uses every local device (1 on this CPU container — the row then
+records the sharded-path overhead; on a TPU slice or with
+``--xla_force_host_platform_device_count`` it records real scaling).
 """
 from __future__ import annotations
 
 import os
 
 from benchmarks import _common as C
+
+
+def _shard_queries(q, mesh):
+    """Place the query batch sharded over the mesh's data axis via the
+    dist layer's activation rules; jit picks the sharding up from the
+    input, so the lookup fn itself is the shared _common one."""
+    import jax
+    from repro.dist import sharding as SH
+
+    return jax.device_put(q, SH.act_sharding(q.shape, ("batch",), mesh))
 
 
 def run(ds="amzn", out_dir="benchmarks/results"):
@@ -49,6 +65,19 @@ def run(ds="amzn", out_dir="benchmarks/results"):
             rows.append(["size_scaling", name, b.size_bytes,
                          round(thpt / 1e6, 3),
                          round(rec["bytes_touched"] * thpt / 1e9, 2)])
+    # (c) sharded dispatch: queries split over the data mesh axis
+    import jax
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    for name, hyper in [("rmi", dict(branching=4096)), ("pgm", dict(eps=64))]:
+        b = base.REGISTRY[name](keys, **hyper)
+        fn = C.full_lookup_fn(b, data_jnp)
+        m = (len(q) // n_dev) * n_dev
+        qm = _shard_queries(jnp.asarray(q[:m]), mesh)
+        secs = C.time_lookup(fn, qm)
+        rows.append(["sharded_dispatch", name, n_dev,
+                     round(m / secs / 1e6, 3), ""])
     C.emit(rows, header=["mode", "index", "x", "mlookups_per_s",
                          "gbytes_touched_per_s"],
            path=os.path.join(out_dir, "parallel_scaling.csv"))

@@ -7,7 +7,16 @@ benchmarks/results/.  ``SOSD_N`` / ``SOSD_Q`` env vars scale the workload
 from __future__ import annotations
 
 import os
+import sys
 import time
+
+# runnable both as `python -m benchmarks.run` and `python benchmarks/run.py`
+# (repo root for the `benchmarks` package, src/ for `repro` when PYTHONPATH
+# wasn't exported)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+if "repro" not in sys.modules:
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 os.environ.setdefault("SOSD_N", "200000")
 os.environ.setdefault("SOSD_Q", "50000")

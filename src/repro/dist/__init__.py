@@ -1,0 +1,27 @@
+"""Distributed execution layer: sharding rules, pipeline schedule, comms.
+
+Three orthogonal pieces (DESIGN.md §8):
+
+  sharding           logical-axis-name -> PartitionSpec resolution over the
+                     launch/mesh.py mesh (GSPMD; the model code only names
+                     axes, never touches device topology)
+  pipeline_parallel  microbatched GPipe schedule over the `model` mesh axis
+                     with exact parity against the sequential stack
+  compression        int8 gradient all-reduce with error feedback
+
+`shard_map` is re-exported here behind a version shim: jax moved it from
+`jax.experimental.shard_map` to the top-level namespace, and this repo runs
+on both sides of that move.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+from repro.dist import compression, pipeline_parallel, sharding  # noqa: F401,E402
+
+__all__ = ["compression", "pipeline_parallel", "sharding", "shard_map"]

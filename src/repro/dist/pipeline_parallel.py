@@ -1,0 +1,98 @@
+"""Microbatched pipeline parallelism over the `model` mesh axis.
+
+GPipe-style circular schedule (DESIGN.md §8.2): the L-layer stack is split
+into P = mesh.shape[axis] contiguous stages of L/P layers; M microbatches
+stream through, one boundary `ppermute` per tick.  Tick t has stage i
+working on microbatch t - i, so the whole batch drains in M + P - 1 ticks
+and the idle ("bubble") fraction is (P-1)/(M+P-1) — `bubble_fraction`
+below, the planning number the scaling benchmark quotes.
+
+Parity is exact, not approximate: each microbatch traverses the same
+layers in the same order as the sequential stack, as one [B, D] block per
+stage, so the pipeline result matches `sequential_apply` to float
+round-off (tests/test_pipeline_parallel.py asserts it, and asserts the
+lowering really contains collective-permute boundary transfers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# version shim lives in the package __init__ (defined before submodule
+# imports, so no cycle)
+from repro.dist import shard_map as _shard_map
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """Idle fraction of the GPipe schedule: (P-1)/(M+P-1)."""
+    if n_stages <= 1:
+        return 0.0
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def sequential_apply(body, ws, x):
+    """Reference: scan every layer over every microbatch, no mesh.
+
+    ws: [L, ...] stacked per-layer weights; x: [M, B, D] microbatches.
+    Processes one [B, D] microbatch at a time (lax.map, not vmap) so the
+    op sequence per microbatch is identical to the pipeline's stages.
+    """
+    def one(xb):
+        return jax.lax.scan(lambda a, w: (body(a, w), None), xb, ws)[0]
+
+    return jax.lax.map(one, x)
+
+
+def pipeline_apply(body, ws, x, mesh, axis: str = "model"):
+    """Run `body` layer-wise as a P-stage pipeline on `mesh[axis]`.
+
+    body: (activation [B, D], layer weights) -> activation [B, D]
+    ws:   [L, ...] stacked weights, L divisible by P; stage i owns the
+          contiguous block ws[i*L/P:(i+1)*L/P]
+    x:    [M, B, D] microbatches, replicated in and out
+
+    Degenerates to the sequential schedule at P == 1 (same code path, the
+    boundary permute is the identity).
+    """
+    n_stages = dict(mesh.shape)[axis]
+    n_layers, n_micro = ws.shape[0], x.shape[0]
+    if n_layers % n_stages:
+        raise ValueError(
+            f"{n_layers} layers not divisible into {n_stages} stages")
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def stage_fn(w_local, xs):
+        # w_local: this stage's [L/P, ...] block; xs: all microbatches.
+        idx = jax.lax.axis_index(axis)
+
+        def run_stage(a):
+            return jax.lax.scan(lambda c, w: (body(c, w), None), a,
+                                w_local)[0]
+
+        def tick(carry, t):
+            state, outs = carry
+            prev = jax.lax.ppermute(state, axis, perm)
+            # stage 0 ingests microbatch t (clip: past the end it chews a
+            # stale copy whose result is never recorded)
+            feed = xs[jnp.clip(t, 0, n_micro - 1)]
+            state = run_stage(jnp.where(idx == 0, feed, prev))
+            # last stage finishes microbatch t-(P-1) at tick t; predicate
+            # only the written slice (a whole-buffer select would copy all
+            # M microbatches per tick)
+            done = t - (n_stages - 1)
+            record = (idx == n_stages - 1) & (done >= 0)
+            slot = jnp.clip(done, 0, n_micro - 1)
+            outs = outs.at[slot].set(jnp.where(record, state, outs[slot]))
+            return (state, outs), None
+
+        init = (jnp.zeros_like(xs[0]), jnp.zeros_like(xs))
+        (_, outs), _ = jax.lax.scan(tick, init,
+                                    jnp.arange(n_micro + n_stages - 1))
+        # only the last stage holds real outputs; zero-mask + psum
+        # replicates them so out_specs can be P() on every device
+        outs = jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    return _shard_map(stage_fn, mesh=mesh, in_specs=(P(axis), P()),
+                      out_specs=P())(ws, x)

@@ -1,0 +1,233 @@
+"""Logical-axis sharding: name -> mesh-axis resolution (DESIGN.md §8.1).
+
+Model code never mentions devices.  It annotates tensors with *logical*
+axis names ("batch", "heads", "expert_fsdp", ...) and this module resolves
+those names against the active mesh through an ordered rule table:
+
+  rules:  logical name -> tuple of candidate mesh-axis groups, best first.
+          A group is a tuple of mesh axes sharded jointly (e.g. the FSDP
+          storage rule ("model", "data") = 256-way on the production mesh).
+
+Resolution (`resolve_spec`) walks the tensor dims in order and takes, per
+dim, the first candidate that survives three filters:
+
+  1. presence  — axes missing from the mesh, or of size 1, drop out of the
+                 group (an elastic 8x16 mesh reuses the 16x16 tables);
+  2. reuse     — a mesh axis already consumed by an earlier dim of the SAME
+                 tensor drops out (XLA forbids axis reuse within one spec);
+  3. divisible — what remains must divide the dim size evenly, else the
+                 whole candidate is rejected and the next one is tried.
+
+A dim whose candidates all fail is replicated (None) — the "divisibility
+fallback" that lets starcoder2's 24 heads run on a 16-way TP axis by
+moving the shards onto head_dim instead.
+
+The rule tables are module-level constants so the dry-run, the train
+driver and the tests all agree on one source of truth; `axis_rules()`
+installs them (plus the mesh) in a thread-local context that
+`logical_constraint` / `act_sharding` / `dispatch_groups` read at trace
+time.  With no context installed everything is a no-op, which is what
+keeps the single-device unit tests oblivious to this module.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Rules = Mapping[str, Tuple[Tuple[str, ...], ...]]
+
+# ---------------------------------------------------------------------------
+# rule tables (DESIGN.md §8.1 reproduces these with rationale per row)
+# ---------------------------------------------------------------------------
+
+#: Activations, TP regime: batch is data-parallel, contraction outputs are
+#: tensor-parallel over `model`.  `seq` and `embed` deliberately have no
+#: rule — embed is the residual-stream dim (sharding it would put an
+#: all-gather in front of every matmul) and seq only shards in the FSDP
+#: regime below.
+ACT_RULES: Rules = {
+    "batch": (("pod", "data"), ("data",)),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "mlp": (("model",),),
+    "vocab": (("model",),),
+    "experts": (("model",),),
+    "moe_cap_tp": (("model",),),
+    "expert_mlp": (("model",),),
+    "ssm_inner": (("model",),),
+}
+
+#: Parameters: TP on the output-feature dims (heads/mlp/vocab/experts),
+#: FSDP storage on the non-contraction dims (head_dim / expert_fsdp pick
+#: up whatever axes TP left free).  `embed` is the contraction dim of
+#: every projection, so it carries no rule: sharding it would all-gather
+#: activations instead of weights at every use site (see moe_specs).
+PARAM_RULES: Rules = {
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (("data", "model"), ("data",), ("model",)),
+    "mlp": (("model", "data"), ("model",), ("data",)),
+    "vocab": (("model",),),
+    "experts": (("model",),),
+    "expert_fsdp": (("model", "data"), ("model",), ("data",)),
+    "ssm_inner": (("model", "data"), ("model",), ("data",)),
+}
+
+#: Activations, FSDP regime (cfg.parallelism == "fsdp"): pure data
+#: parallelism — batch shards over every mesh axis it divides, and `seq`
+#: picks up whatever the batch couldn't use (sequence parallelism), so a
+#: prefill_32k batch of 32 on a 16x16 mesh still fills all 256 devices.
+FSDP_ACT_RULES: Rules = {
+    **ACT_RULES,
+    "batch": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    "seq": (("model",), ("pod",)),
+}
+
+
+# ---------------------------------------------------------------------------
+# thread-local context installed by axis_rules()
+# ---------------------------------------------------------------------------
+class _Context(threading.local):
+    def __init__(self):
+        self.mesh = None
+        self.act_rules: Optional[Rules] = None
+        self.param_rules: Optional[Rules] = None
+
+
+_CTX = _Context()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, act_rules: Optional[Rules] = None,
+               param_rules: Optional[Rules] = None):
+    """Install (mesh, rule tables) for logical_constraint / act_sharding.
+
+    Re-entrant and thread-local: jit tracing happens on the caller's
+    thread, so constraints inside a traced model body see the context the
+    driver entered.
+    """
+    prev = (_CTX.mesh, _CTX.act_rules, _CTX.param_rules)
+    _CTX.mesh = mesh
+    _CTX.act_rules = ACT_RULES if act_rules is None else act_rules
+    _CTX.param_rules = PARAM_RULES if param_rules is None else param_rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.act_rules, _CTX.param_rules = prev
+
+
+def select_rules(cfg) -> Tuple[Rules, Rules]:
+    """(act_rules, param_rules) for a ModelConfig.
+
+    `parallelism="fsdp"` swaps in the pure-DP activation table (mixtral:
+    8 experts can't split a 16-way model axis, so TP buys nothing and the
+    dispatch all-to-all is cheapest fully data-parallel).  "tp" and "auto"
+    use the TP tables — PARAM_RULES already stores weights FSDP-style on
+    the non-contraction dims, so "tp" is the safe general default.
+    """
+    mode = getattr(cfg, "parallelism", "auto")
+    if mode == "fsdp":
+        return FSDP_ACT_RULES, PARAM_RULES
+    return ACT_RULES, PARAM_RULES
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+def _mesh_shape(mesh) -> Mapping[str, int]:
+    # jax.sharding.Mesh has .shape as an OrderedDict; tests also pass bare
+    # objects with a dict .shape (resolution only needs axis sizes).
+    return dict(mesh.shape)
+
+
+def resolve_spec(shape: Sequence[int], names: Sequence[Optional[str]],
+                 mesh, rules: Rules) -> P:
+    """Resolve one tensor's logical names to a PartitionSpec (see module
+    docstring for the three filters)."""
+    sizes = _mesh_shape(mesh)
+    used: set = set()
+    spec = []
+    for dim, name in zip(shape, names):
+        entry = None
+        for cand in (rules.get(name, ()) if name is not None else ()):
+            axes = tuple(a for a in cand
+                         if sizes.get(a, 1) > 1 and a not in used)
+            if not axes:
+                continue
+            n_shards = 1
+            for a in axes:
+                n_shards *= sizes[a]
+            if dim % n_shards:
+                continue
+            entry = axes
+            break
+        if entry is None:
+            spec.append(None)
+        else:
+            used.update(entry)
+            spec.append(entry[0] if len(entry) == 1 else entry)
+    return P(*spec)
+
+
+def logical_constraint(x, names: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical names; identity with no context.
+
+    The single entry point the model code uses — it stays importable and
+    free of side effects on machines with one device and no mesh.
+    """
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    rules = _CTX.act_rules if _CTX.act_rules is not None else ACT_RULES
+    spec = resolve_spec(x.shape, names, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def act_sharding(shape: Sequence[int], names: Sequence[Optional[str]],
+                 mesh) -> NamedSharding:
+    """NamedSharding for one input/activation leaf (dry-run batch specs)."""
+    rules = _CTX.act_rules if _CTX.act_rules is not None else ACT_RULES
+    return NamedSharding(mesh, resolve_spec(shape, names, mesh, rules))
+
+
+def shard_tree(shapes: Any, names: Any, mesh, rules: Optional[Rules] = None):
+    """Map a ShapeDtypeStruct tree + matching logical-name tree to
+    NamedShardings.  Default rules: the context's param rules (params and
+    optimizer state); pass `rules=act_rules` for the decode cache."""
+    if rules is None:
+        rules = _CTX.param_rules if _CTX.param_rules is not None else PARAM_RULES
+
+    def one(s, n):
+        return NamedSharding(mesh, resolve_spec(tuple(s.shape), tuple(n),
+                                                mesh, rules))
+
+    return jax.tree.map(one, shapes, names)
+
+
+def dispatch_groups(tokens: Optional[int] = None) -> int:
+    """Number of MoE dispatch groups = batch ("data") shards of the active
+    mesh; 1 with no mesh installed.
+
+    Must return a Python int (it sizes a reshape at trace time).  The
+    caller (moe._n_groups) halves it until it divides the token count, so
+    this only needs the upper bound: the shard count of the first
+    applicable batch rule.
+    """
+    mesh = _CTX.mesh
+    if mesh is None:
+        return 1
+    rules = _CTX.act_rules if _CTX.act_rules is not None else ACT_RULES
+    sizes = _mesh_shape(mesh)
+    for cand in rules.get("batch", ()):
+        axes = tuple(a for a in cand if sizes.get(a, 1) > 1)
+        if axes:
+            g = 1
+            for a in axes:
+                g *= sizes[a]
+            return g
+    return 1

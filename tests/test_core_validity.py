@@ -5,7 +5,11 @@ SOSD surrogates; end-to-end exactness through each last-mile search.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dep: only the property-based test below needs it
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
 
 from repro.core import base, validate
 from repro.data import sosd
@@ -46,50 +50,55 @@ def test_end_to_end_exact(datasets, queries, name, hyper):
         assert r["exact"], (name, lm, r)
 
 
-@st.composite
-def key_arrays(draw):
-    """Adversarial key sets: clusters, gaps, near-duplicates, outliers."""
-    n = draw(st.integers(64, 512))
-    style = draw(st.sampled_from(["uniform", "clustered", "outliers", "dense"]))
-    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
-    if style == "uniform":
-        raw = rng.integers(0, 2**62, n, dtype=np.uint64)
-    elif style == "clustered":
-        centers = rng.integers(0, 2**50, 5, dtype=np.uint64)
-        raw = (centers[rng.integers(0, 5, n)]
-               + rng.integers(0, 1000, n).astype(np.uint64))
-    elif style == "outliers":
-        raw = rng.integers(0, 2**30, n, dtype=np.uint64)
-        raw[: max(1, n // 100)] = rng.integers(
-            2**60, 2**63, max(1, n // 100), dtype=np.uint64)
-    else:
-        raw = np.arange(n, dtype=np.uint64) * 2 + 10
-    keys = np.unique(raw)
-    return keys if len(keys) >= 16 else np.unique(
-        np.arange(32, dtype=np.uint64) * 7)
+if st is not None:
+    @st.composite
+    def key_arrays(draw):
+        """Adversarial key sets: clusters, gaps, near-duplicates, outliers."""
+        n = draw(st.integers(64, 512))
+        style = draw(st.sampled_from(["uniform", "clustered", "outliers",
+                                      "dense"]))
+        rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+        if style == "uniform":
+            raw = rng.integers(0, 2**62, n, dtype=np.uint64)
+        elif style == "clustered":
+            centers = rng.integers(0, 2**50, 5, dtype=np.uint64)
+            raw = (centers[rng.integers(0, 5, n)]
+                   + rng.integers(0, 1000, n).astype(np.uint64))
+        elif style == "outliers":
+            raw = rng.integers(0, 2**30, n, dtype=np.uint64)
+            raw[: max(1, n // 100)] = rng.integers(
+                2**60, 2**63, max(1, n // 100), dtype=np.uint64)
+        else:
+            raw = np.arange(n, dtype=np.uint64) * 2 + 10
+        keys = np.unique(raw)
+        return keys if len(keys) >= 16 else np.unique(
+            np.arange(32, dtype=np.uint64) * 7)
 
-
-@pytest.mark.parametrize("name,hyper", [
-    ("rmi", dict(branching=32)),
-    ("pgm", dict(eps=8, top_cutoff=8)),
-    ("radix_spline", dict(eps=8, radix_bits=8)),
-    ("btree", dict(sample=4)),
-    ("rbs", dict(radix_bits=6)),
-])
-@settings(max_examples=25, deadline=None)
-@given(keys=key_arrays(), seed=st.integers(0, 2**31))
-def test_property_validity(name, hyper, keys, seed):
-    rng = np.random.default_rng(seed)
-    present = keys[rng.integers(0, len(keys), 64)]
-    absent = rng.integers(0, 2**63, 64, dtype=np.uint64)
-    edge = np.array([0, 1, keys[0], keys[-1],
-                     np.uint64(2**64 - 1)], np.uint64)
-    q = np.concatenate([present, absent, edge])
-    b = base.REGISTRY[name](keys, **hyper)
-    r = validate.check_bounds(b, keys, q)
-    assert r["valid"], (name, r["n_bad"], r["bad_idx"])
-    e = validate.check_end_to_end(b, keys, q)
-    assert e["exact"], (name, e)
+    @pytest.mark.parametrize("name,hyper", [
+        ("rmi", dict(branching=32)),
+        ("pgm", dict(eps=8, top_cutoff=8)),
+        ("radix_spline", dict(eps=8, radix_bits=8)),
+        ("btree", dict(sample=4)),
+        ("rbs", dict(radix_bits=6)),
+    ])
+    @settings(max_examples=25, deadline=None)
+    @given(keys=key_arrays(), seed=st.integers(0, 2**31))
+    def test_property_validity(name, hyper, keys, seed):
+        rng = np.random.default_rng(seed)
+        present = keys[rng.integers(0, len(keys), 64)]
+        absent = rng.integers(0, 2**63, 64, dtype=np.uint64)
+        edge = np.array([0, 1, keys[0], keys[-1],
+                         np.uint64(2**64 - 1)], np.uint64)
+        q = np.concatenate([present, absent, edge])
+        b = base.REGISTRY[name](keys, **hyper)
+        r = validate.check_bounds(b, keys, q)
+        assert r["valid"], (name, r["n_bad"], r["bad_idx"])
+        e = validate.check_end_to_end(b, keys, q)
+        assert e["exact"], (name, e)
+else:
+    @pytest.mark.skip(reason="optional dep `hypothesis` not installed")
+    def test_property_validity():
+        pass
 
 
 def test_binary_search_is_reference(datasets, queries):

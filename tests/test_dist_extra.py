@@ -1,0 +1,164 @@
+"""Edge-case coverage for repro.dist beyond the seed contract tests.
+
+Seed tests pin the happy paths (test_train_infra.py,
+test_pipeline_parallel.py); this module covers the boundaries: degenerate
+quantization inputs, bubble-fraction limits, elastic meshes, and the
+no-context defaults the single-device tests rely on.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import compression as GC
+from repro.dist import sharding as SH
+from repro.dist.pipeline_parallel import bubble_fraction, sequential_apply
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize round-trip edge cases
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("x", [
+    np.zeros(64, np.float32),                      # all-zero: scale floor
+    np.full(17, 1e30, np.float32),                 # huge but finite
+    np.array([-1e30, 1e30, 0.0], np.float32),      # mixed extreme signs
+    np.array([1e-30], np.float32),                 # denormal-adjacent
+    np.linspace(-1.0, 1.0, 255).astype(np.float32),
+], ids=["zeros", "huge", "mixed-extreme", "tiny", "linspace"])
+def test_quantize_roundtrip_edge_cases(x):
+    x = jnp.asarray(x)
+    c, res = GC.quantize(x)
+    deq = GC.dequantize(c)
+    # finite everywhere — no overflow/NaN from the scale computation
+    assert bool(jnp.isfinite(deq).all())
+    assert bool(jnp.isfinite(res).all())
+    # exact round-trip: dequantize + residual reconstructs the input
+    np.testing.assert_allclose(np.asarray(deq + res), np.asarray(x),
+                               rtol=1e-6, atol=1e-38)
+    # one-step error bound (allow 1 ulp of the dequantized magnitude)
+    ulp = float(jnp.max(jnp.abs(deq))) * 1.2e-7
+    assert float(jnp.max(jnp.abs(res))) <= float(c.scale) / 2 + ulp + 1e-38
+    # int8 payload really is int8 and inside the symmetric range
+    assert c.q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(c.q.astype(jnp.int32)))) <= 127
+
+
+def test_quantize_zeros_dequantize_to_zeros():
+    c, res = GC.quantize(jnp.zeros(8, jnp.float32))
+    assert float(jnp.max(jnp.abs(GC.dequantize(c)))) == 0.0
+    assert float(jnp.max(jnp.abs(res))) == 0.0
+
+
+def test_quantize_error_feedback_bf16_input():
+    """Error feedback must work in the params' storage dtype too."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, 256), jnp.bfloat16)
+    c, res = GC.quantize(x)
+    assert res.dtype == x.dtype
+    assert bool(jnp.isfinite(GC.dequantize(c)).all())
+
+
+# ---------------------------------------------------------------------------
+# bubble fraction boundaries
+# ---------------------------------------------------------------------------
+def test_bubble_fraction_boundaries():
+    assert bubble_fraction(1, 1) == 0.0           # no pipeline, no bubble
+    assert bubble_fraction(2, 1) == 0.5           # single microbatch: P-1 of
+    assert bubble_fraction(4, 1) == 0.75          # M+P-1 ticks are idle
+    # monotone: more microbatches -> smaller bubble
+    fr = [bubble_fraction(4, m) for m in (1, 2, 8, 32, 128)]
+    assert all(a > b for a, b in zip(fr, fr[1:]))
+    # asymptotics: -> 0 as M -> inf, -> 1 as P -> inf
+    assert bubble_fraction(4, 10_000) < 1e-3
+    assert bubble_fraction(10_000, 1) > 0.999
+
+
+def test_sequential_apply_matches_manual_loop():
+    rng = np.random.default_rng(1)
+    ws = jnp.asarray(rng.normal(0, 0.1, (3, 8, 8)).astype(np.float32))
+    x = jnp.asarray(rng.normal(0, 1, (2, 4, 8)).astype(np.float32))
+
+    def body(a, w):
+        return jnp.tanh(a @ w)
+
+    got = sequential_apply(body, ws, x)
+    ref = np.stack([
+        np.asarray(body(body(body(x[m], ws[0]), ws[1]), ws[2]))
+        for m in range(x.shape[0])])
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sharding: elastic meshes, no-context defaults, dispatch groups
+# ---------------------------------------------------------------------------
+class _FakeMesh:
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_resolve_spec_elastic_mesh_reuses_tables():
+    """A shrunk 8x16 mesh resolves through the same 16x16 rule tables."""
+    mesh = _FakeMesh(data=8, model=16)
+    spec = SH.resolve_spec((256, 4096, 2048), ("batch", "seq", "embed"),
+                           mesh, SH.ACT_RULES)
+    assert spec == P("data", None, None)
+    # joint FSDP group (model, data) now covers 128 shards
+    spec = SH.resolve_spec((6144, 16384), ("embed", "mlp"), mesh,
+                           SH.PARAM_RULES)
+    assert spec == P(None, ("model", "data"))
+
+
+def test_resolve_spec_unknown_names_replicate():
+    mesh = _FakeMesh(data=16, model=16)
+    spec = SH.resolve_spec((4, 32, 7), ("layers", None, "nonsense"),
+                           mesh, SH.PARAM_RULES)
+    assert spec == P(None, None, None)
+
+
+def test_logical_constraint_no_context_is_identity():
+    x = jnp.ones((4, 8))
+    assert SH.logical_constraint(x, ("batch", "seq")) is x
+
+
+def test_dispatch_groups_follows_context():
+    assert SH.dispatch_groups(1024) == 1  # no mesh installed
+    mesh = _FakeMesh(data=16, model=16)
+    with SH.axis_rules(mesh):
+        assert SH.dispatch_groups(1024) == 16          # ACT: data only
+    with SH.axis_rules(mesh, act_rules=SH.FSDP_ACT_RULES):
+        assert SH.dispatch_groups(1024) == 256         # FSDP: data*model
+    assert SH.dispatch_groups(1024) == 1  # context restored
+
+
+def test_axis_rules_nesting_restores_previous():
+    m1 = _FakeMesh(data=4)
+    m2 = _FakeMesh(data=2, model=2)
+    with SH.axis_rules(m1):
+        with SH.axis_rules(m2, act_rules=SH.FSDP_ACT_RULES):
+            assert SH.dispatch_groups() == 4  # (data, model) of m2
+        assert SH.dispatch_groups() == 4      # back to m1: data=4
+    assert SH.dispatch_groups() == 1
+
+
+def test_select_rules_modes():
+    class Cfg:
+        parallelism = "fsdp"
+
+    act, param = SH.select_rules(Cfg())
+    assert act is SH.FSDP_ACT_RULES and param is SH.PARAM_RULES
+    Cfg.parallelism = "auto"
+    act, param = SH.select_rules(Cfg())
+    assert act is SH.ACT_RULES and param is SH.PARAM_RULES
+
+
+def test_shard_tree_on_real_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shapes = {"w": jax.ShapeDtypeStruct((64, 128), jnp.float32),
+              "b": jax.ShapeDtypeStruct((128,), jnp.float32)}
+    names = {"w": ("embed", "mlp"), "b": ("mlp",)}
+    tree = SH.shard_tree(shapes, names, mesh)
+    # trivial axes -> fully replicated NamedShardings, but real ones
+    assert tree["w"].spec == P(None, None)
+    assert tree["b"].spec == P(None)
+    assert tree["w"].mesh is mesh

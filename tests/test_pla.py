@@ -1,6 +1,10 @@
 """Error guarantees of the PLA builders (PGM cone / RS spline)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import _pla
 

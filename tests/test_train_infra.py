@@ -160,12 +160,10 @@ def test_quantize_max_error_one_step():
 
 
 def test_compressed_psum_single_axis():
+    from repro.dist import shard_map
+
     mesh = jax.make_mesh((1,), ("pod",))
-    out = jax.jit(
-        jax.shard_map,
-        static_argnums=(0,),
-    ) if False else None
-    f = jax.shard_map(
+    f = shard_map(
         lambda x: GC.compressed_psum(x, "pod")[0],
         mesh=mesh, in_specs=P(), out_specs=P())
     x = jnp.asarray(np.random.default_rng(1).normal(0, 1, 64).astype(np.float32))

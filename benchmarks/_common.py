@@ -48,21 +48,11 @@ def time_lookup(fn: Callable, *args, repeats: int = REPEATS) -> float:
 
 
 def full_lookup_fn(build, data_jnp, last_mile: str = "binary"):
-    """jit'd end-to-end lookup: index bounds + last-mile search."""
-    import jax
+    """jit'd end-to-end lookup: index bounds + last-mile search
+    (canonical implementation lives in repro.core.search)."""
     from repro.core import search
 
-    max_err = build.meta["max_err"]
-    lookup = build.lookup
-    state = build.state
-    fn = search.SEARCH_FNS[last_mile]
-
-    @jax.jit
-    def run(q):
-        lo, hi = lookup(state, q)
-        return fn(data_jnp, q, lo, hi, max_err)
-
-    return run
+    return search.fused_lookup_fn(build, data_jnp, last_mile=last_mile)
 
 
 def emit(rows, header=None, path=None):

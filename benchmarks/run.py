@@ -25,7 +25,7 @@ os.environ.setdefault("SOSD_Q", "50000")
 def main() -> None:
     from benchmarks import (batching_effects, build_times, explain, key_size,
                             moe_dispatch, pareto, parallel_scaling, scaling,
-                            search_fn)
+                            search_fn, serve_throughput)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -42,6 +42,9 @@ def main() -> None:
         ("moe_dispatch_technique", moe_dispatch.run,
          lambda rows: "; ".join(f"{r[0]}:{r[2]}x" for r in rows
                                 if r[1] == "dense/sorted-flop-ratio")),
+        ("serve_throughput", serve_throughput.run,
+         lambda rows: f"verified={sum(r['verified_vs_core'] for r in rows)}"
+                      f"/{len(rows)}"),
     ]
     for name, fn, derive in jobs:
         t0 = time.perf_counter()

@@ -1,0 +1,123 @@
+"""Serve-layer throughput: the lookup SERVICE under streaming load.
+
+The paper's §7 multi-thread study (and SOSD after it) makes
+throughput-under-parallel-load the decisive metric for learned indexes
+in systems.  This benchmark drives `repro.serve.lookup.LookupService` —
+async admission, deadline/size micro-batching, sharded fused dispatch —
+with a stream of small requests and sweeps
+
+    micro-batch budget x index type x dataset,
+
+emitting one JSON row per cell: achieved lookups/sec, batch latency
+(mean/p99), batcher occupancy, and `verified_vs_core` — the service's
+positions compared bit-for-bit against a direct single-device
+`repro.core` fused lookup on the same query stream.
+
+Small max_batch buys latency at an occupancy/throughput cost; large
+max_batch amortizes dispatch overhead — the serving-layer analogue of
+the paper's Fig. 14 batching study.  On 1 CPU device the sharded path
+measures its own overhead; with more devices (or
+``--xla_force_host_platform_device_count``) it measures real scaling.
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/serve_throughput.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from benchmarks import _common as C
+
+#: (max_batch keys per dispatch, keys per client request)
+BATCH_POINTS = [(512, 32), (4096, 256)]
+
+#: index types swept, at the shared serving-default hyperparameters
+#: (repro.serve.lookup.DEFAULT_HYPER — same table the serve driver uses)
+INDEX_NAMES = ["rmi", "pgm", "radix_spline"]
+
+DATASETS = ["amzn", "face", "osm", "wiki"]
+
+#: queries per cell — enough batches for a latency distribution, small
+#: enough that the 24-cell sweep stays CPU-container friendly.
+N_SERVE_Q = int(os.environ.get("SERVE_Q", min(C.N_QUERIES, 10_000)))
+
+
+def _run_cell(ds: str, index: str, max_batch: int, request_keys: int):
+    import jax.numpy as jnp
+    from repro.core import search
+    from repro.serve.lookup import (DEFAULT_HYPER, LookupService,
+                                    LookupServiceConfig)
+    hyper = DEFAULT_HYPER.get(index, {})
+
+    keys = C.dataset(ds)
+    q = C.queries(ds)[:N_SERVE_Q]
+
+    t0 = time.perf_counter()
+    svc = LookupService(keys, LookupServiceConfig(
+        index=index, hyper=hyper, max_batch=max_batch, deadline_ms=2.0))
+    build_s = time.perf_counter() - t0
+
+    chunks = [q[i:i + request_keys] for i in range(0, len(q), request_keys)]
+    with svc:                       # background flusher
+        futs = [svc.submit(c) for c in chunks]
+        outs = [f.result(timeout=120.0) for f in futs]
+    got = np.concatenate(outs)
+
+    direct = np.asarray(
+        search.fused_lookup_fn(svc.generation.build, jnp.asarray(keys))(
+            jnp.asarray(q)), dtype=np.int64)
+    verified = bool(np.array_equal(got, direct))
+
+    snap = svc.metrics.snapshot()
+    return {
+        "dataset": ds,
+        "index": index,
+        "max_batch": max_batch,
+        "request_keys": request_keys,
+        "n_keys": int(len(keys)),
+        "n_queries": int(len(q)),
+        "n_shards": svc.dispatcher.n_shards,
+        "build_s": round(build_s, 4),
+        "lookups_per_s": round(snap["lookups_per_s"], 1),
+        "mean_batch_ms": round(snap["mean_batch_ms"], 4),
+        "p99_batch_ms": round(snap["p99_batch_ms"], 4),
+        "mean_occupancy": round(snap["mean_occupancy"], 4),
+        "batches": snap["batches"],
+        "verified_vs_core": verified,
+    }
+
+
+def run(out_dir: str = "benchmarks/results"):
+    rows = []
+    for ds in DATASETS:
+        for index in INDEX_NAMES:
+            for max_batch, request_keys in BATCH_POINTS:
+                r = _run_cell(ds, index, max_batch, request_keys)
+                rows.append(r)
+                print(f"{ds:5s} {index:12s} batch={max_batch:5d} "
+                      f"{r['lookups_per_s']/1e3:9.1f} klookups/s  "
+                      f"p99={r['p99_batch_ms']:8.2f}ms  occ="
+                      f"{r['mean_occupancy']:.2f}  "
+                      f"verified={r['verified_vs_core']}", flush=True)
+    path = os.path.join(out_dir, "serve_throughput.json")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {path}")
+    n_bad = sum(not r["verified_vs_core"] for r in rows)
+    if n_bad:
+        raise SystemExit(f"{n_bad}/{len(rows)} cells NOT verified vs core")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -121,6 +121,29 @@ SEARCH_FNS = {
 }
 
 
+def fused_lookup_fn(build, data_jnp, last_mile: str = "binary"):
+    """jit'd end-to-end lookup for a built index: bounds + last-mile fixup.
+
+    The canonical fused pipeline every consumer shares — the benchmark
+    matrix (`benchmarks/_common.full_lookup_fn` delegates here) and the
+    lookup service (`repro.serve.lookup.dispatch`).  The returned callable
+    is closed over the index state, so jit's compile cache keys only on
+    the query-batch shape; the serving dispatcher exploits that by
+    padding batches to power-of-two buckets.
+    """
+    max_err = build.meta["max_err"]
+    lookup = build.lookup
+    state = build.state
+    fn = SEARCH_FNS[last_mile]
+
+    @jax.jit
+    def run(q):
+        lo, hi = lookup(state, q)
+        return fn(data_jnp, q, lo, hi, max_err)
+
+    return run
+
+
 def full_binary(data, q):
     """Unbounded baseline (the paper's BS, size == 0)."""
     n = data.shape[0]

@@ -14,12 +14,22 @@ documented CDF *shape* of each dataset (Figure 6 and the text):
 All generators return exactly ``n`` sorted unique uint64 keys, fully
 determined by ``seed``.  EXPERIMENTS.md flags every paper comparison as
 surrogate-based.
+
+Real datasets: when ``REPRO_SOSD_DIR`` points at a directory holding the
+published SOSD uint64 binaries (books/fb/osm_cellids/wiki_ts,
+https://github.com/learnedsystems/SOSD), ``generate`` loads and
+deterministically subsamples the real keys instead — see ``load_real``.
 """
 from __future__ import annotations
 
+import hashlib
+import os
+import warnings
+
 import numpy as np
 
-__all__ = ["DATASETS", "generate", "make_queries"]
+__all__ = ["DATASETS", "SOSD_SOURCES", "generate", "load_real",
+           "make_queries"]
 
 
 def _finalize(raw: np.ndarray, n: int, rng: np.random.Generator) -> np.ndarray:
@@ -120,8 +130,95 @@ DATASETS = {
     "wiki": gen_wiki,
 }
 
+# ---------------------------------------------------------------------------
+# Real SOSD binaries (env-gated; the container itself is offline)
+# ---------------------------------------------------------------------------
+
+#: our dataset name -> published SOSD file name (uint64 variants; the
+#: format is an 8-byte little-endian count followed by `count` uint64 keys)
+SOSD_SOURCES = {
+    "amzn": "books_200M_uint64",
+    "face": "fb_200M_uint64",
+    "osm": "osm_cellids_200M_uint64",
+    "wiki": "wiki_ts_200M_uint64",
+}
+
+
+def _sha256(path: str, chunk: int = 1 << 22) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                break
+            h.update(block)
+    return h.hexdigest()
+
+
+def _check_sidecar(path: str) -> None:
+    """Verify `path` against a ``<file>.sha256`` sidecar if one exists
+    (``sha256sum`` format: hex digest, whitespace, filename).  A missing
+    sidecar is accepted — the digests aren't shipped with the binaries —
+    but a PRESENT sidecar that disagrees is corruption, not a fallback
+    case, so it raises."""
+    sidecar = path + ".sha256"
+    if not os.path.exists(sidecar):
+        return
+    with open(sidecar) as f:
+        tokens = f.read().split()
+    if not tokens or len(tokens[0]) != 64:
+        raise ValueError(f"malformed sha256 sidecar {sidecar}")
+    expected = tokens[0].lower()
+    got = _sha256(path)
+    if got != expected:
+        raise ValueError(
+            f"checksum mismatch for {path}: expected {expected}, got {got}")
+
+
+def load_real(name: str, n: int, sosd_dir: str, seed: int = 0) -> np.ndarray:
+    """Load + deterministically subsample one published SOSD binary.
+
+    Returns exactly ``n`` sorted unique uint64 keys: the file's unique
+    keys taken at evenly spaced ranks (``floor(i * L / n)``, strictly
+    increasing for L >= n), which preserves the CDF shape the indexes
+    are benchmarked against.  ``seed`` is accepted for signature parity
+    with the surrogates and ignored — the subsample is rank-determined.
+    """
+    del seed
+    path = os.path.join(sosd_dir, SOSD_SOURCES[name])
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    _check_sidecar(path)
+    with open(path, "rb") as f:
+        count = int(np.fromfile(f, dtype="<u8", count=1)[0])
+    held = (os.path.getsize(path) - 8) // 8
+    if held < count:
+        raise ValueError(
+            f"{path}: header promises {count} keys, file holds {held}")
+    # memmap the 1.6GB published files instead of reading them wholesale;
+    # np.unique materializes the one sorted copy we actually need.
+    mm = np.memmap(path, dtype="<u8", mode="r", offset=8, shape=(count,))
+    keys = np.unique(mm).astype(np.uint64, copy=False)  # sorted unique
+    if len(keys) < n:
+        raise ValueError(
+            f"{path}: only {len(keys)} unique keys, {n} requested")
+    if len(keys) == n:
+        return keys
+    pos = (np.arange(n, dtype=np.float64) * (len(keys) / n)).astype(np.int64)
+    return keys[pos]
+
 
 def generate(name: str, n: int, seed: int = 0) -> np.ndarray:
+    """``n`` sorted unique uint64 keys: the real SOSD dataset when
+    ``REPRO_SOSD_DIR`` is set and holds the binary, else the surrogate."""
+    sosd_dir = os.environ.get("REPRO_SOSD_DIR")
+    if sosd_dir:
+        try:
+            return load_real(name, n, sosd_dir, seed=seed)
+        except FileNotFoundError:
+            warnings.warn(
+                f"REPRO_SOSD_DIR={sosd_dir} has no {SOSD_SOURCES[name]}; "
+                f"using the {name} surrogate", stacklevel=2)
     return DATASETS[name](n, seed)
 
 

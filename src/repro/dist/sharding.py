@@ -209,19 +209,26 @@ def shard_tree(shapes: Any, names: Any, mesh, rules: Optional[Rules] = None):
     return jax.tree.map(one, shapes, names)
 
 
-def dispatch_groups(tokens: Optional[int] = None) -> int:
-    """Number of MoE dispatch groups = batch ("data") shards of the active
-    mesh; 1 with no mesh installed.
+def dispatch_groups(tokens: Optional[int] = None, *, mesh=None,
+                    rules: Optional[Rules] = None) -> int:
+    """Shard count of the first applicable `batch` rule candidate; 1 with
+    no mesh.  Two consumers, one rule walk: the MoE dispatch group count
+    (moe._n_groups, which halves it until it divides the token count) and
+    the serve-layer dispatcher's batch-shard count
+    (`repro.serve.lookup.dispatch`).
 
-    Must return a Python int (it sizes a reshape at trace time).  The
-    caller (moe._n_groups) halves it until it divides the token count, so
-    this only needs the upper bound: the shard count of the first
-    applicable batch rule.
+    Must return a Python int (it sizes a reshape at trace time).  `mesh`
+    and `rules` default to the thread-local context installed by
+    axis_rules() — pass them explicitly to resolve against a mesh with no
+    context (the serving path).
     """
-    mesh = _CTX.mesh
+    del tokens
+    if mesh is None:
+        mesh = _CTX.mesh
     if mesh is None:
         return 1
-    rules = _CTX.act_rules if _CTX.act_rules is not None else ACT_RULES
+    if rules is None:
+        rules = _CTX.act_rules if _CTX.act_rules is not None else ACT_RULES
     sizes = _mesh_shape(mesh)
     for cand in rules.get("batch", ()):
         axes = tuple(a for a in cand if sizes.get(a, 1) > 1)

@@ -190,6 +190,10 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="lower the reduced smoke config instead of the "
+                         "published one (CI: fast partitionability check "
+                         "of the sharding rule tables on the 16x16 mesh)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -209,7 +213,12 @@ def main():
             print(f"SKIP {arch} x {shape}: {SKIPS[(arch, shape)]}", flush=True)
             continue
         try:
-            r = run_cell(arch, shape, args.multi_pod, args.microbatches)
+            override = None
+            if args.smoke:
+                from repro.configs import get_smoke
+                override = get_smoke(arch)
+            r = run_cell(arch, shape, args.multi_pod, args.microbatches,
+                         cfg_override=override)
             results.append(r)
             print(f"OK   {arch} x {shape}: "
                   f"{r['dot_flops_per_device']:.3e} dot-flops/dev, "
@@ -228,6 +237,10 @@ def main():
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
         print(f"wrote {args.out}")
+
+    n_fail = sum(r.get("status") == "fail" for r in results)
+    if n_fail:
+        raise SystemExit(f"{n_fail}/{len(results)} cells failed")
 
 
 if __name__ == "__main__":

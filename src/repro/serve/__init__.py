@@ -1,1 +1,3 @@
-"""Serving: paged KV cache with learned-index page lookup + batch engine."""
+"""Serving: paged KV cache with learned-index page lookup, the token
+batch engine, and the sharded learned-index lookup service
+(`repro.serve.lookup`, DESIGN.md §9)."""

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serve.common import MonotonicCounter
 from repro.serve.kv_cache import PagedKVCache
 
 
@@ -41,6 +42,7 @@ class ServeEngine:
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}
         self.slot_of: Dict[int, int] = {}
+        self._rids = MonotonicCounter()
         cache_sh = M.cache_shapes(cfg, batch=max_batch, s_max=max_seq)
         self.cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), cache_sh)
@@ -52,8 +54,10 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 16) -> int:
-        rid = len(self.queue) + len(self.active) + sum(
-            1 for r in self.active.values() if r.done)
+        # Monotonic, never reused — the old queue/active-size formula
+        # re-issued an rid once finished requests retired (two clients
+        # would then collide in the results dict).
+        rid = self._rids.next()
         self.queue.append(Request(rid, list(prompt), max_new))
         return rid
 

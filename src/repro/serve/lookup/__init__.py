@@ -1,0 +1,29 @@
+"""`repro.serve.lookup` — sharded, batched, async-admission lookup service.
+
+The layer between the index structures (`repro.core`) and the workload
+drivers (DESIGN.md §9).  Requests carrying small key arrays are admitted
+asynchronously, coalesced by a deadline/size micro-batcher, dispatched as
+one device-sharded fused lookup (index bounds + last-mile fixup) over the
+`data` mesh axis, and completed through per-request futures.  Index
+generations hot-swap atomically: a rebuild on a fresh key set becomes
+visible between batches, never inside one.
+"""
+from repro.serve.lookup.admission import LookupFuture, MicroBatcher
+from repro.serve.lookup.dispatch import ShardedDispatcher, make_lookup_fn
+from repro.serve.lookup.metrics import ServiceMetrics
+from repro.serve.lookup.registry import Generation, IndexRegistry
+from repro.serve.lookup.service import (DEFAULT_HYPER, LookupService,
+                                        LookupServiceConfig)
+
+__all__ = [
+    "DEFAULT_HYPER",
+    "LookupFuture",
+    "MicroBatcher",
+    "ShardedDispatcher",
+    "make_lookup_fn",
+    "ServiceMetrics",
+    "Generation",
+    "IndexRegistry",
+    "LookupService",
+    "LookupServiceConfig",
+]

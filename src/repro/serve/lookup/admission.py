@@ -1,0 +1,164 @@
+"""Async admission queue + micro-batcher (DESIGN.md §9.1).
+
+Requests carry variable-length uint64 key arrays.  Admission is
+continuous (callers never block on submit) and flushing is governed by
+the two classic triggers of a serving micro-batcher:
+
+  size      pending keys reached ``max_batch`` — flush immediately;
+  deadline  the OLDEST pending request has waited ``deadline_s`` — flush
+            whatever is pending, however small.
+
+``take()`` drains whole requests in admission order, so completion is
+FIFO per client by construction: a request's future can only resolve
+after every earlier request's future (batches are dispatched by a single
+flusher, in take order).  A request larger than ``max_batch`` is not
+split — it forms an oversize batch on its own; the dispatcher pads to a
+power-of-two bucket anyway, so the compile-cache cost is the same.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.common import MonotonicCounter
+
+
+class LookupFuture:
+    """Per-request completion handle (stdlib-free, two-method surface)."""
+
+    def __init__(self, rid: int, n_keys: int):
+        self.rid = rid
+        self.n_keys = n_keys
+        self._event = threading.Event()
+        self._result: Optional[np.ndarray] = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"lookup rid={self.rid} not done")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    # -- producer side (service internals only) -------------------------
+    def _set_result(self, value: np.ndarray) -> None:
+        self._result = value
+        self._event.set()
+
+    def _set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    rid: int
+    keys: np.ndarray          # 1-D uint64
+    future: LookupFuture
+    t_submit: float           # perf_counter at admission
+
+
+class MicroBatcher:
+    """Thread-safe admission queue with size/deadline flush policy."""
+
+    def __init__(self, max_batch: int, deadline_s: float,
+                 counter: Optional[MonotonicCounter] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = int(max_batch)
+        self.deadline_s = float(deadline_s)
+        self._counter = counter if counter is not None else MonotonicCounter()
+        self._pending: "collections.deque[PendingRequest]" = collections.deque()
+        self._n_keys = 0
+        self._cond = threading.Condition()
+
+    # -- admission -------------------------------------------------------
+    def submit(self, keys) -> Tuple[int, LookupFuture]:
+        # Always copy: the request may sit queued for deadline_s, and a
+        # client reusing its buffer must not mutate keys already admitted.
+        keys = np.array(keys, dtype=np.uint64, copy=True).ravel()
+        if keys.size == 0:
+            raise ValueError("empty key array")
+        rid = self._counter.next()
+        fut = LookupFuture(rid, keys.size)
+        req = PendingRequest(rid, keys, fut, time.perf_counter())
+        with self._cond:
+            self._pending.append(req)
+            self._n_keys += keys.size
+            self._cond.notify_all()
+        return rid, fut
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def pending_keys(self) -> int:
+        with self._cond:
+            return self._n_keys
+
+    @property
+    def pending_requests(self) -> int:
+        with self._cond:
+            return len(self._pending)
+
+    # -- flush policy ----------------------------------------------------
+    def _ready_locked(self, now: float) -> bool:
+        if not self._pending:
+            return False
+        if self._n_keys >= self.max_batch:
+            return True
+        return now - self._pending[0].t_submit >= self.deadline_s
+
+    def ready(self) -> bool:
+        with self._cond:
+            return self._ready_locked(time.perf_counter())
+
+    def wait_ready(self, timeout: Optional[float] = None) -> bool:
+        """Block until a flush is due (size OR deadline) or `timeout`."""
+        t_end = None if timeout is None else time.perf_counter() + timeout
+        with self._cond:
+            while True:
+                now = time.perf_counter()
+                if self._ready_locked(now):
+                    return True
+                # sleep until the oldest request's deadline or the caller's
+                # timeout, whichever is sooner; a submit() notify wakes us
+                # early to re-check the size trigger.
+                waits = []
+                if self._pending:
+                    waits.append(self._pending[0].t_submit
+                                 + self.deadline_s - now)
+                if t_end is not None:
+                    if now >= t_end:
+                        return False
+                    waits.append(t_end - now)
+                self._cond.wait(timeout=min(waits) if waits else None)
+
+    def take(self, force: bool = False) -> List[PendingRequest]:
+        """Drain whole requests, in order, up to ``max_batch`` keys.
+
+        Returns [] when no flush is due (unless ``force``).  Always takes
+        at least one request when it takes anything, so an oversize
+        request cannot deadlock the queue.
+        """
+        with self._cond:
+            if not self._pending:
+                return []
+            if not force and not self._ready_locked(time.perf_counter()):
+                return []
+            out: List[PendingRequest] = []
+            taken = 0
+            while self._pending:
+                nxt = self._pending[0]
+                if out and taken + nxt.keys.size > self.max_batch:
+                    break
+                out.append(self._pending.popleft())
+                taken += nxt.keys.size
+            self._n_keys -= taken
+            return out

@@ -1,0 +1,86 @@
+"""Sharded dispatch: one fused lookup over the `data` mesh axis (§9.2).
+
+Generalizes mode (c) of `benchmarks/parallel_scaling.py` into a reusable
+engine.  The query batch is padded to a power-of-two bucket (a multiple
+of the shard count), placed over the mesh's data axis through the
+`repro.dist.sharding` activation rule for the logical `batch` axis, and
+run through the fused index-bounds + last-mile pipeline
+(`repro.core.search.fused_lookup_fn`).  jit picks the partitioning up
+from the input sharding, so the very same compiled lookup serves 1 or N
+devices; the index state and the key array stay replicated (they are the
+small side — the paper's learned indexes are KB–MB against GB of data).
+
+Bit-exactness: every lane of the fused pipeline is an independent
+gather/compare chain over the same replicated arrays, so the sharded
+result is identical — not approximately, bit-for-bit — to the
+single-device result on the same queries (pinned by
+tests/test_serve_lookup.py on all four surrogate datasets).  Pad lanes
+repeat the first real key and are sliced off before completion.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import search
+from repro.dist import sharding as SH
+
+#: Smallest dispatch width: keeps tiny deadline-flush batches from
+#: compiling one program per size, and matches the 128-lane TPU register.
+PAD_QUANTUM = 128
+
+
+def make_lookup_fn(build, data_jnp, last_mile: Optional[str] = None):
+    """Fused lookup closed over one index generation's state.
+
+    ``last_mile`` defaults to the hyperparameter the index was built
+    with, falling back to binary — same policy as the benchmarks.
+    """
+    if last_mile is None:
+        last_mile = build.hyper.get("last_mile", "binary")
+    return search.fused_lookup_fn(build, data_jnp, last_mile=last_mile)
+
+
+def data_axis_mesh():
+    """1-D mesh over every local device, axis named `data` — the serving
+    analogue of the production mesh's data axis (launch/mesh.py)."""
+    return jax.make_mesh((len(jax.devices()),), ("data",))
+
+
+class ShardedDispatcher:
+    """Pads, places, and runs query batches over the data mesh axis."""
+
+    def __init__(self, mesh=None, pad_quantum: int = PAD_QUANTUM):
+        self.mesh = data_axis_mesh() if mesh is None else mesh
+        self.pad_quantum = int(pad_quantum)
+        # one rule walk for everyone: the dist layer owns the policy
+        self.n_shards = SH.dispatch_groups(mesh=self.mesh,
+                                           rules=SH.ACT_RULES)
+
+    def padded_size(self, m: int) -> int:
+        """Next power-of-two >= max(m, quantum), then up to a multiple of
+        the shard count — bounds distinct compiled shapes at log2(max)."""
+        p = self.pad_quantum
+        while p < m:
+            p <<= 1
+        r = p % self.n_shards
+        return p + (self.n_shards - r if r else 0)
+
+    def __call__(self, fn, keys: np.ndarray) -> np.ndarray:
+        """Run `fn` (a fused lookup) on `keys`; returns int64 positions."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        m = keys.size
+        p = self.padded_size(m)
+        if p != m:
+            q = np.empty(p, np.uint64)
+            q[:m] = keys
+            q[m:] = keys[0]  # any valid key: lanes are independent
+        else:
+            q = keys
+        qj = jax.device_put(
+            jnp.asarray(q), SH.act_sharding((p,), ("batch",), self.mesh))
+        out = fn(qj)
+        return np.asarray(out, dtype=np.int64)[:m]

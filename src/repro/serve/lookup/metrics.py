@@ -1,0 +1,103 @@
+"""Per-batch serving metrics (DESIGN.md §9.4).
+
+Everything the throughput benchmark and the ops story need, with no
+dependencies: a log-spaced latency histogram (fixed memory, exact enough
+for p50/p99 at 5% bucket resolution), batch occupancy (real keys /
+padded dispatch width — the price of the deadline trigger), and
+aggregate lookups/sec over the serving window.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+
+class LatencyHistogram:
+    """Log-spaced histogram over [1us, ~84s), growth factor 1.05."""
+
+    def __init__(self, lo_s: float = 1e-6, factor: float = 1.05,
+                 n_buckets: int = 360):
+        self.lo_s = lo_s
+        self.factor = factor
+        self.bounds: List[float] = []
+        b = lo_s
+        for _ in range(n_buckets):
+            self.bounds.append(b)
+            b *= factor
+        self.counts = [0] * (n_buckets + 1)
+        self.n = 0
+        self.total_s = 0.0
+
+    def record(self, seconds: float) -> None:
+        i = 0
+        for i, ub in enumerate(self.bounds):
+            if seconds < ub:
+                break
+        else:
+            i = len(self.bounds)
+        self.counts[i] += 1
+        self.n += 1
+        self.total_s += seconds
+
+    def quantile(self, q: float) -> float:
+        """Upper bound of the bucket holding the q-quantile (0 if empty)."""
+        if self.n == 0:
+            return 0.0
+        target = q * self.n
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= target:
+                return self.bounds[i] if i < len(self.bounds) else float("inf")
+        return self.bounds[-1]
+
+    @property
+    def mean(self) -> float:
+        return self.total_s / self.n if self.n else 0.0
+
+
+class ServiceMetrics:
+    """Aggregated per-batch observations; `snapshot()` is the read API."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.batch_latency = LatencyHistogram()
+        self.queue_latency = LatencyHistogram()
+        self.n_batches = 0
+        self.n_keys = 0
+        self.n_requests = 0
+        self.sum_occupancy = 0.0
+        self.t_first: Optional[float] = None
+        self.t_last: Optional[float] = None
+
+    def observe_batch(self, *, n_keys: int, padded: int, n_requests: int,
+                      t_oldest_submit: float, t_start: float,
+                      t_end: float) -> None:
+        with self._lock:
+            self.n_batches += 1
+            self.n_keys += n_keys
+            self.n_requests += n_requests
+            self.sum_occupancy += n_keys / max(padded, 1)
+            self.batch_latency.record(t_end - t_start)
+            self.queue_latency.record(t_start - t_oldest_submit)
+            if self.t_first is None:
+                self.t_first = t_start
+            self.t_last = t_end
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            window = ((self.t_last - self.t_first)
+                      if self.n_batches and self.t_last > self.t_first else 0.0)
+            return {
+                "batches": self.n_batches,
+                "requests": self.n_requests,
+                "lookups": self.n_keys,
+                "lookups_per_s": (self.n_keys / window) if window else 0.0,
+                "mean_occupancy": (self.sum_occupancy / self.n_batches
+                                   if self.n_batches else 0.0),
+                "mean_batch_ms": self.batch_latency.mean * 1e3,
+                "p50_batch_ms": self.batch_latency.quantile(0.50) * 1e3,
+                "p99_batch_ms": self.batch_latency.quantile(0.99) * 1e3,
+                "mean_queue_ms": self.queue_latency.mean * 1e3,
+                "p99_queue_ms": self.queue_latency.quantile(0.99) * 1e3,
+            }

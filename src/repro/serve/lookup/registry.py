@@ -1,0 +1,81 @@
+"""Index generations with atomic hot-swap (DESIGN.md §9.3).
+
+A `Generation` is one fully-built, immutable serving unit: the
+`IndexBuild` (state pytree + interpreting functions), the device copy of
+the sorted key array, and the fused lookup closed over both.  The
+registry's only mutable cell is a name -> Generation pointer; `publish`
+replaces that pointer AFTER the build completes, so a reader can observe
+the old generation or the new one, never a half-built one.  Swapping
+does not drain in-flight batches: a dispatched batch pins the generation
+it was taken with (`service._dispatch_once` reads `current()` exactly
+once per batch) and completes against it even if a swap lands mid-batch.
+
+Rebuilds (`build_and_publish`) run entirely outside the lock — index
+construction is seconds of host-side numpy (benchmarks/build_times.csv)
+and must never stall admission or dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import base
+from repro.serve.common import MonotonicCounter
+from repro.serve.lookup.dispatch import make_lookup_fn
+
+DEFAULT_NAME = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class Generation:
+    """One immutable, fully-built serving generation."""
+
+    version: int
+    build: base.IndexBuild
+    data: Any                 # jnp device copy of the sorted keys
+    fn: Callable              # fused lookup: queries -> positions
+    n_keys: int
+
+
+class IndexRegistry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._versions = MonotonicCounter()
+        self._current: Dict[str, Generation] = {}
+
+    def current(self, name: str = DEFAULT_NAME) -> Generation:
+        with self._lock:
+            gen = self._current.get(name)
+        if gen is None:
+            raise KeyError(f"no generation published under {name!r}")
+        return gen
+
+    def publish(self, build: base.IndexBuild, data,
+                name: str = DEFAULT_NAME,
+                last_mile: Optional[str] = None) -> Generation:
+        """Wrap a COMPLETE IndexBuild into a generation and swap it in."""
+        gen = Generation(
+            version=self._versions.next(),
+            build=build,
+            data=data,
+            fn=make_lookup_fn(build, data, last_mile=last_mile),
+            n_keys=int(data.shape[0]),
+        )
+        with self._lock:
+            self._current[name] = gen
+        return gen
+
+    def build_and_publish(self, index: str, keys: np.ndarray,
+                          hyper: Optional[Dict[str, Any]] = None,
+                          name: str = DEFAULT_NAME,
+                          last_mile: Optional[str] = None) -> Generation:
+        """Rebuild on a fresh key set, then swap — build is outside the
+        lock, the swap is one pointer assignment."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        build = base.REGISTRY[index](keys, **(hyper or {}))
+        data = jnp.asarray(keys)
+        return self.publish(build, data, name=name, last_mile=last_mile)

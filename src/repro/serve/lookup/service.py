@@ -1,0 +1,177 @@
+"""`LookupService`: admission -> micro-batch -> sharded dispatch (§9).
+
+The serving analogue of `ServeEngine`, for index lookups instead of
+tokens: clients `submit()` small uint64 key arrays and get futures;
+a single flusher (either the background thread started by `start()`,
+or explicit `flush()`/`drain()` calls in synchronous tests/benchmarks)
+drains the micro-batcher in admission order and runs one sharded fused
+lookup per batch.  One flusher + in-order draining gives FIFO completion
+per client for free.
+
+Results are LB positions (`D[pos]` is the smallest key >= query — the
+paper's lower-bound semantics, DESIGN.md §2), bit-identical to a direct
+single-device `repro.core` lookup on the same queries.
+
+Hot-swap: `swap_keys(new_keys)` rebuilds off-thread-safe (outside every
+lock) and publishes atomically; batches in flight complete against the
+generation they were dispatched with — nothing drains, nothing blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.serve.common import MonotonicCounter
+from repro.serve.lookup.admission import LookupFuture, MicroBatcher
+from repro.serve.lookup.dispatch import PAD_QUANTUM, ShardedDispatcher
+from repro.serve.lookup.metrics import ServiceMetrics
+from repro.serve.lookup.registry import Generation, IndexRegistry
+
+
+#: One source of truth for the serving-default hyperparameters — the
+#: numbers the README/DESIGN-cited throughput sweep publishes; the serve
+#: driver demos the same configuration.
+DEFAULT_HYPER = {
+    "rmi": dict(branching=4096),
+    "pgm": dict(eps=64),
+    "radix_spline": dict(eps=32, radix_bits=16),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LookupServiceConfig:
+    index: str = "rmi"                 # repro.core.base.REGISTRY name
+    hyper: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    last_mile: Optional[str] = None    # None -> the build's own choice
+    max_batch: int = 4096              # keys per dispatch (flush trigger)
+    deadline_ms: float = 2.0           # oldest-request flush deadline
+    pad_quantum: int = PAD_QUANTUM
+
+
+class LookupService:
+    def __init__(self, keys: np.ndarray,
+                 config: Optional[LookupServiceConfig] = None,
+                 mesh=None, counter: Optional[MonotonicCounter] = None):
+        self.cfg = config if config is not None else LookupServiceConfig()
+        self.registry = IndexRegistry()
+        self.dispatcher = ShardedDispatcher(
+            mesh=mesh, pad_quantum=self.cfg.pad_quantum)
+        self.metrics = ServiceMetrics()
+        self.batcher = MicroBatcher(
+            self.cfg.max_batch, self.cfg.deadline_ms / 1e3,
+            counter=counter if counter is not None else MonotonicCounter())
+        self._dispatch_lock = threading.Lock()   # one batch at a time
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.swap_keys(keys)
+
+    # -- index lifecycle -------------------------------------------------
+    def swap_keys(self, keys: np.ndarray) -> Generation:
+        """Rebuild on a fresh key set and hot-swap it in (no draining)."""
+        return self.registry.build_and_publish(
+            self.cfg.index, keys, hyper=self.cfg.hyper,
+            last_mile=self.cfg.last_mile)
+
+    @property
+    def generation(self) -> Generation:
+        return self.registry.current()
+
+    # -- client surface --------------------------------------------------
+    def submit(self, keys) -> LookupFuture:
+        """Admit one request; never blocks.  Completion needs a flusher:
+        either the background thread (`start()`/`with svc:`) or explicit
+        `flush()`/`drain()` calls — a future submitted with neither
+        stays pending until one of them runs."""
+        _, fut = self.batcher.submit(keys)
+        return fut
+
+    def lookup(self, keys, timeout: Optional[float] = 30.0) -> np.ndarray:
+        """Synchronous convenience: submit + ensure progress + wait."""
+        fut = self.submit(keys)
+        if self._thread is None:
+            self.drain()
+        return fut.result(timeout)
+
+    # -- flushing --------------------------------------------------------
+    def _dispatch_once(self, force: bool = False) -> bool:
+        """Take + dispatch one batch; returns whether one was dispatched.
+
+        Serialized by `_dispatch_lock`: take order == dispatch order ==
+        completion order, which is the FIFO guarantee.
+        """
+        with self._dispatch_lock:
+            batch = self.batcher.take(force=force)
+            if not batch:
+                return False
+            gen = self.registry.current()   # pinned for this whole batch
+            keys = (batch[0].keys if len(batch) == 1
+                    else np.concatenate([r.keys for r in batch]))
+            t0 = time.perf_counter()
+            try:
+                out = self.dispatcher(gen.fn, keys)
+            except BaseException as e:  # noqa: BLE001 — fail the batch, not the flusher
+                for r in batch:
+                    r.future._set_exception(e)
+                return True
+            t1 = time.perf_counter()
+            off = 0
+            for r in batch:
+                r.future._set_result(out[off:off + r.keys.size])
+                off += r.keys.size
+            self.metrics.observe_batch(
+                n_keys=keys.size,
+                padded=self.dispatcher.padded_size(keys.size),
+                n_requests=len(batch),
+                t_oldest_submit=batch[0].t_submit,
+                t_start=t0, t_end=t1)
+            return True
+
+    def flush(self) -> bool:
+        """Dispatch one due batch if any (size or deadline trigger)."""
+        return self._dispatch_once(force=False)
+
+    def drain(self) -> int:
+        """Force-dispatch until the queue is empty; returns batch count."""
+        n = 0
+        while self._dispatch_once(force=True):
+            n += 1
+        return n
+
+    # -- background flusher ----------------------------------------------
+    def start(self) -> "LookupService":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+
+        def _loop():
+            while not self._stop.is_set():
+                if self.batcher.wait_ready(timeout=0.05):
+                    self._dispatch_once(force=False)
+            self.drain()   # complete everything admitted before stop()
+
+        self._thread = threading.Thread(
+            target=_loop, name="lookup-flusher", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the background flusher, completing everything admitted so
+        far.  The service stays usable afterwards — in synchronous mode
+        (submit + flush/drain), or via a later start()."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        self.drain()       # anything admitted during the join window
+        self._stop.clear()
+
+    def __enter__(self) -> "LookupService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

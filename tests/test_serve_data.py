@@ -64,6 +64,10 @@ def test_serve_engine_generates():
     assert len(outs[r2]) == 3
     assert all(0 <= t < cfg.vocab for t in outs[r1])
     assert eng.kv.alloc.utilization == 0.0  # everything released
+    # rids are never reused, even after every request retired (the old
+    # queue/active-size formula would hand r3 the value of r1 again)
+    r3 = eng.submit([4, 5], max_new=2)
+    assert len({r1, r2, r3}) == 3
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,366 @@
+"""Lookup-service tests: admission/batcher policy, FIFO completion,
+sharded dispatch bit-exactness, hot-swap atomicity, real-SOSD loader."""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import base, search
+from repro.data import sosd
+from repro.serve.common import MonotonicCounter
+from repro.serve.lookup import (IndexRegistry, LookupService,
+                                LookupServiceConfig, MicroBatcher,
+                                ShardedDispatcher)
+from repro.serve.lookup.metrics import LatencyHistogram, ServiceMetrics
+
+
+# ---------------------------------------------------------------------------
+# shared id counter
+# ---------------------------------------------------------------------------
+def test_monotonic_counter_unique_across_threads():
+    c = MonotonicCounter()
+    seen = []
+
+    def worker():
+        seen.extend(c.next() for _ in range(500))
+
+    ts = [threading.Thread(target=worker) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(set(seen)) == 2000
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher flush policy (no jax involved)
+# ---------------------------------------------------------------------------
+def test_batcher_flushes_on_size():
+    b = MicroBatcher(max_batch=100, deadline_s=60.0)
+    for _ in range(3):
+        b.submit(np.arange(40, dtype=np.uint64) + 1)
+    assert b.ready()                       # 120 >= 100, no deadline needed
+    batch = b.take()
+    # whole requests in FIFO order, stop before exceeding max_batch
+    assert [r.keys.size for r in batch] == [40, 40]
+    assert [r.rid for r in batch] == sorted(r.rid for r in batch)
+    assert b.pending_keys == 40            # third request left queued
+
+
+def test_batcher_flushes_on_deadline():
+    b = MicroBatcher(max_batch=10_000, deadline_s=0.05)
+    b.submit(np.arange(5, dtype=np.uint64) + 1)
+    assert not b.ready()                   # far below size trigger
+    assert b.take() == []
+    assert b.wait_ready(timeout=2.0)       # deadline fires
+    batch = b.take()
+    assert len(batch) == 1 and batch[0].keys.size == 5
+    assert b.pending_keys == 0
+
+
+def test_batcher_oversize_request_not_split():
+    b = MicroBatcher(max_batch=8, deadline_s=60.0)
+    b.submit(np.arange(50, dtype=np.uint64) + 1)
+    batch = b.take()                       # size trigger: 50 >= 8
+    assert len(batch) == 1 and batch[0].keys.size == 50
+
+
+def test_batcher_wait_ready_wakes_on_submit():
+    b = MicroBatcher(max_batch=4, deadline_s=60.0)
+    t0 = time.perf_counter()
+    threading.Timer(
+        0.05, lambda: b.submit(np.arange(4, dtype=np.uint64) + 1)).start()
+    assert b.wait_ready(timeout=5.0)       # size trigger, not the 60s deadline
+    assert time.perf_counter() - t0 < 2.0
+
+
+def test_batcher_rejects_empty():
+    b = MicroBatcher(max_batch=4, deadline_s=1.0)
+    with pytest.raises(ValueError):
+        b.submit(np.array([], np.uint64))
+
+
+# ---------------------------------------------------------------------------
+# service: FIFO completion, deadline flush, verification vs core
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def amzn_service():
+    keys = sosd.generate("amzn", 50_000, seed=3)
+    svc = LookupService(keys, LookupServiceConfig(
+        index="rmi", hyper=dict(branching=1024),
+        max_batch=512, deadline_ms=5.0))
+    yield keys, svc
+    svc.stop()
+
+
+def test_service_fifo_completion_per_client(amzn_service):
+    keys, svc = amzn_service
+    q = sosd.make_queries(keys, 6_400, seed=5)
+    per_client = {}
+    lock = threading.Lock()
+
+    def client(cid):
+        rng = np.random.default_rng(cid)
+        futs = []
+        for i in range(20):
+            m = int(rng.integers(8, 120))
+            futs.append(svc.submit(q[(cid * 20 + i) * 8:][:m]))
+        with lock:
+            per_client[cid] = futs
+
+    with svc:
+        ts = [threading.Thread(target=client, args=(c,)) for c in range(3)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        for futs in per_client.values():
+            for i, f in enumerate(futs):
+                f.result(timeout=30.0)
+                # when future i is done, every earlier future of the same
+                # client is done: single flusher, admission-order take()
+                assert all(g.done() for g in futs[:i])
+
+
+def test_service_deadline_flush_completes_small_request(amzn_service):
+    keys, svc = amzn_service
+    with svc:
+        t0 = time.perf_counter()
+        pos = svc.submit(keys[:7]).result(timeout=10.0)   # 7 keys << 512
+        dt = time.perf_counter() - t0
+    np.testing.assert_array_equal(pos, np.arange(7))
+    assert dt < 5.0                       # deadline (5ms) flushed it, not size
+
+
+def test_service_results_bit_identical_vs_core_all_datasets(datasets, queries):
+    import jax.numpy as jnp
+
+    for name, keys in datasets.items():
+        q = queries[name]
+        svc = LookupService(keys, LookupServiceConfig(
+            index="rmi", hyper=dict(branching=512),
+            max_batch=2048, deadline_ms=1.0))
+        futs = [svc.submit(q[i:i + 977]) for i in range(0, len(q), 977)]
+        svc.drain()
+        got = np.concatenate([f.result(timeout=30.0) for f in futs])
+        direct = np.asarray(search.fused_lookup_fn(
+            svc.generation.build, jnp.asarray(keys))(jnp.asarray(q)),
+            dtype=np.int64)
+        np.testing.assert_array_equal(got, direct, err_msg=name)
+        # and the fused pipeline itself is exact vs the host oracle
+        np.testing.assert_array_equal(
+            direct, base.lower_bound_oracle(keys, q), err_msg=name)
+
+
+def test_sharded_dispatch_multi_device_bit_identical(tmp_path):
+    """Force 4 host devices in a subprocess (XLA locks the device count at
+    first init): the 4-way sharded dispatch must equal the 1-device fused
+    lookup bit-for-bit."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import search
+from repro.data import sosd
+from repro.serve.lookup import LookupService, LookupServiceConfig
+
+assert len(jax.devices()) == 4
+keys = sosd.generate("osm", 20_000, seed=3)
+q = sosd.make_queries(keys, 4_000, seed=4)
+svc = LookupService(keys, LookupServiceConfig(
+    index="pgm", hyper=dict(eps=64), max_batch=1024, deadline_ms=1.0))
+assert svc.dispatcher.n_shards == 4
+futs = [svc.submit(q[i:i+333]) for i in range(0, len(q), 333)]
+svc.drain()
+got = np.concatenate([f.result(10.0) for f in futs])
+direct = np.asarray(search.fused_lookup_fn(
+    svc.generation.build, jnp.asarray(keys))(jnp.asarray(q)), np.int64)
+assert np.array_equal(got, direct), "sharded != single-device"
+print("SHARDED_OK")
+"""
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(root, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "SHARDED_OK" in out.stdout, out.stderr
+
+
+def test_dispatcher_padded_size_buckets():
+    d = ShardedDispatcher()            # 1 device on the test container
+    assert d.padded_size(1) == d.pad_quantum
+    assert d.padded_size(128) == 128
+    assert d.padded_size(129) == 256
+    for m in (1, 7, 511, 513, 4096):
+        p = d.padded_size(m)
+        assert p >= m and p % d.n_shards == 0
+
+
+# ---------------------------------------------------------------------------
+# hot swap
+# ---------------------------------------------------------------------------
+def test_registry_swap_is_atomic_never_half_built():
+    keys_old = sosd.generate("amzn", 10_000, seed=1)
+    keys_new = sosd.generate("wiki", 10_000, seed=2)
+    reg = IndexRegistry()
+    g0 = reg.build_and_publish("rmi", keys_old, hyper=dict(branching=256))
+
+    in_build = threading.Event()
+    release = threading.Event()
+
+    @base.register("_test_slow_rmi")
+    def slow_build(keys, **hyper):           # noqa: ANN001
+        in_build.set()
+        assert release.wait(10.0)            # hold the build "half done"
+        return base.REGISTRY["rmi"](keys, **hyper)
+
+    try:
+        t = threading.Thread(target=reg.build_and_publish, args=(
+            "_test_slow_rmi", keys_new), kwargs=dict(hyper=dict(branching=256)))
+        t.start()
+        assert in_build.wait(10.0)
+        # mid-build: readers still get the OLD complete generation
+        cur = reg.current()
+        assert cur.version == g0.version
+        q = sosd.make_queries(keys_old, 200, seed=3)
+        np.testing.assert_array_equal(
+            np.asarray(cur.fn(np.asarray(q)), np.int64),
+            base.lower_bound_oracle(keys_old, q))
+        release.set()
+        t.join(timeout=30.0)
+        assert reg.current().version > g0.version
+        assert reg.current().n_keys == len(keys_new)
+    finally:
+        release.set()
+        base.REGISTRY.pop("_test_slow_rmi", None)
+
+
+def test_service_hot_swap_under_load():
+    keys_old = sosd.generate("face", 30_000, seed=1)
+    keys_new = sosd.generate("osm", 30_000, seed=2)
+    svc = LookupService(keys_old, LookupServiceConfig(
+        index="radix_spline", hyper=dict(eps=32, radix_bits=12),
+        max_batch=256, deadline_ms=1.0))
+    oracles = {0: (keys_old, base.lower_bound_oracle),
+               1: (keys_new, base.lower_bound_oracle)}
+    bad = []
+
+    def client():
+        rng = np.random.default_rng(0)
+        for i in range(60):
+            q = rng.integers(1, 1 << 62, size=32, dtype=np.uint64)
+            v_before = svc.generation.version
+            pos = svc.submit(q).result(timeout=30.0)
+            v_after = svc.generation.version
+            ok = any(np.array_equal(pos, fn(k, q))
+                     for v, (k, fn) in oracles.items()
+                     if v_before <= v <= v_after)
+            if not ok:
+                bad.append(i)
+
+    with svc:
+        t = threading.Thread(target=client)
+        t.start()
+        time.sleep(0.05)
+        svc.swap_keys(keys_new)        # no drain, mid-stream
+        t.join(timeout=60.0)
+    assert not t.is_alive()
+    assert not bad
+    assert svc.generation.version == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+def test_latency_histogram_quantiles_bracket():
+    h = LatencyHistogram()
+    for ms in (1, 1, 1, 1, 1, 1, 1, 1, 1, 100):
+        h.record(ms / 1e3)
+    assert h.n == 10
+    assert 0.8e-3 < h.quantile(0.5) < 1.3e-3
+    assert 80e-3 < h.quantile(0.99) < 130e-3
+    assert abs(h.mean - (9 * 1e-3 + 100e-3) / 10) < 2e-3
+
+
+def test_service_metrics_occupancy_and_counts():
+    m = ServiceMetrics()
+    m.observe_batch(n_keys=100, padded=128, n_requests=4,
+                    t_oldest_submit=0.0, t_start=0.001, t_end=0.002)
+    m.observe_batch(n_keys=128, padded=128, n_requests=2,
+                    t_oldest_submit=0.002, t_start=0.003, t_end=0.004)
+    s = m.snapshot()
+    assert s["batches"] == 2 and s["requests"] == 6 and s["lookups"] == 228
+    assert abs(s["mean_occupancy"] - (100 / 128 + 1.0) / 2) < 1e-9
+    assert s["lookups_per_s"] == pytest.approx(228 / 0.003)
+
+
+# ---------------------------------------------------------------------------
+# real-SOSD loader (env-gated, checksum-verified)
+# ---------------------------------------------------------------------------
+def _write_sosd_binary(path, keys):
+    with open(path, "wb") as f:
+        np.asarray([len(keys)], dtype="<u8").tofile(f)
+        np.asarray(keys, dtype="<u8").tofile(f)
+
+
+def test_load_real_subsamples_and_sorts(tmp_path):
+    rng = np.random.default_rng(0)
+    raw = np.unique(rng.integers(1, 1 << 60, size=5_000, dtype=np.uint64))
+    _write_sosd_binary(tmp_path / sosd.SOSD_SOURCES["wiki"], raw)
+    got = sosd.load_real("wiki", 1_000, str(tmp_path))
+    assert len(got) == 1_000 and got.dtype == np.uint64
+    assert (np.diff(got.astype(np.float64)) > 0).all()
+    assert np.isin(got, raw).all()
+    # endpoints-ish preserved: rank-based subsample starts at the minimum
+    assert got[0] == raw[0]
+
+
+def test_generate_uses_real_when_env_set(tmp_path, monkeypatch):
+    raw = np.arange(1, 4_001, dtype=np.uint64) * 7
+    _write_sosd_binary(tmp_path / sosd.SOSD_SOURCES["amzn"], raw)
+    monkeypatch.setenv("REPRO_SOSD_DIR", str(tmp_path))
+    got = sosd.generate("amzn", 2_000, seed=9)
+    assert np.isin(got, raw).all()       # real keys, not the surrogate
+
+
+def test_generate_falls_back_when_file_missing(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SOSD_DIR", str(tmp_path))   # empty dir
+    with pytest.warns(UserWarning, match="surrogate"):
+        got = sosd.generate("face", 5_000, seed=5)
+    np.testing.assert_array_equal(got, sosd.gen_face(5_000, seed=5))
+
+
+def test_load_real_checksum_sidecar(tmp_path):
+    import hashlib
+
+    raw = np.arange(1, 3_001, dtype=np.uint64) * 3
+    path = tmp_path / sosd.SOSD_SOURCES["osm"]
+    _write_sosd_binary(path, raw)
+    digest = hashlib.sha256(path.read_bytes()).hexdigest()
+    sidecar = tmp_path / (sosd.SOSD_SOURCES["osm"] + ".sha256")
+
+    sidecar.write_text(f"{digest}  {sosd.SOSD_SOURCES['osm']}\n")
+    got = sosd.load_real("osm", 500, str(tmp_path))       # verifies, loads
+    assert len(got) == 500
+
+    sidecar.write_text("0" * 64 + f"  {sosd.SOSD_SOURCES['osm']}\n")
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        sosd.load_real("osm", 500, str(tmp_path))
+
+    sidecar.write_text("")                 # truncated sidecar: diagnosable
+    with pytest.raises(ValueError, match="malformed sha256 sidecar"):
+        sosd.load_real("osm", 500, str(tmp_path))
+
+
+def test_load_real_truncated_file_raises(tmp_path):
+    path = tmp_path / sosd.SOSD_SOURCES["face"]
+    with open(path, "wb") as f:
+        np.asarray([1000], dtype="<u8").tofile(f)         # promises 1000
+        np.arange(10, dtype="<u8").tofile(f)              # holds 10
+    with pytest.raises(ValueError, match="header promises"):
+        sosd.load_real("face", 5, str(tmp_path))

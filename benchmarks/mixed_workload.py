@@ -1,0 +1,141 @@
+"""Mixed-workload sweep: mutable indexes under index x mix x skew.
+
+The axis the source paper explicitly could not open ("read-only
+in-memory workloads ... uniformly-sampled keys", its §8 limitation):
+this sweep drives the MUTABLE lookup service — delta-buffered inserts,
+merged reads, threshold-triggered hot-swap compaction — with seeded
+`repro.workloads` traces across
+
+    index type x operation mix (YCSB-A/B/C/E) x key-access skew,
+
+emitting one JSON row per cell: ops/sec, admitted inserts, compaction
+count and latency, peak delta occupancy, and ``verified_vs_oracle`` —
+EVERY per-op result (read positions and admitted flags) compared
+against a plain sorted-array `oracle_replay`, which crosses every
+compaction the run performed.  Thresholds are sized so insert-carrying
+cells compact at least once; read-only cells pin the zero-write
+regression path.
+
+    PYTHONPATH=src python benchmarks/mixed_workload.py [--smoke]
+
+Env: ``SOSD_N`` (base keys), ``MIXED_OPS`` (trace length per cell).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/mixed_workload.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from benchmarks import _common as C
+
+#: (mix, distribution) cells — the YCSB ladder crossed with the skews
+#: that flip learned-index conclusions (zipfian hot keys, hot-set
+#: residency, scan-heavy E).
+MIX_POINTS = [
+    ("ycsb_c", "uniform"),     # the paper's own regime, as the baseline
+    ("ycsb_b", "zipfian"),     # read-mostly, skewed
+    ("ycsb_a", "zipfian"),     # write-heavy, skewed
+    ("ycsb_b", "hot_set"),
+    ("ycsb_e", "sequential"),  # range blend over scan starts
+]
+
+INDEX_NAMES = ["rmi", "pgm", "radix_spline"]
+DATASETS = ["amzn", "osm"]
+
+N_OPS = int(os.environ.get("MIXED_OPS", 6_000))
+
+
+def _run_cell(ds: str, index: str, mix: str, dist: str, n_ops: int,
+              n_keys: int):
+    from repro import workloads
+    from repro.serve.lookup import (DEFAULT_HYPER, MutableLookupService,
+                                    MutableLookupServiceConfig)
+
+    keys = C.dataset(ds, n=n_keys)
+    wl = workloads.make_workload(keys, n_ops, mix=mix, dist=dist,
+                                 seed=13, present_frac=0.9)
+    n_ins = wl.counts()["insert"]
+    # threshold: insert-carrying mixes cross it at least once mid-trace
+    threshold = max(16, n_ins // 2) if n_ins else 1 << 30
+
+    t0 = time.perf_counter()
+    svc = MutableLookupService(keys, MutableLookupServiceConfig(
+        index=index, hyper=DEFAULT_HYPER.get(index, {}),
+        max_batch=1024, deadline_ms=2.0, compact_threshold=threshold))
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    with svc:                       # background flusher + auto compaction
+        got = workloads.replay_on_service(wl, svc, chunk=128)
+    replay_s = time.perf_counter() - t0
+
+    expected = workloads.oracle_replay(keys, wl)
+    verified = bool(np.array_equal(got, expected))
+    snap = svc.metrics.snapshot()
+    return {
+        "dataset": ds,
+        "index": index,
+        "mix": mix,
+        "dist": dist,
+        "n_keys": int(len(keys)),
+        "n_ops": wl.n_ops,
+        **{f"n_{k}": v for k, v in wl.counts().items()},
+        "admitted": snap["admitted"],
+        "compactions": snap["compactions"],
+        "mean_compaction_ms": round(snap["mean_compaction_ms"], 3),
+        "delta_threshold": threshold if n_ins else 0,
+        "build_s": round(build_s, 4),
+        "ops_per_s": round(wl.n_ops / replay_s, 1),
+        "mean_batch_ms": round(snap["mean_batch_ms"], 4),
+        "mean_insert_ms": round(snap["mean_insert_ms"], 4),
+        "verified_vs_oracle": verified,
+    }
+
+
+def run(out_dir: str = "benchmarks/results", n_ops: int = N_OPS,
+        n_keys: int = C.N_KEYS, datasets=None, indexes=None,
+        mix_points=None):
+    rows = []
+    for ds in (datasets or DATASETS):
+        for index in (indexes or INDEX_NAMES):
+            for mix, dist in (mix_points or MIX_POINTS):
+                r = _run_cell(ds, index, mix, dist, n_ops, n_keys)
+                rows.append(r)
+                print(f"{ds:5s} {index:12s} {mix:7s} {dist:10s} "
+                      f"{r['ops_per_s']/1e3:8.1f} kops/s  "
+                      f"compactions={r['compactions']}  "
+                      f"admitted={r['admitted']}  "
+                      f"verified={r['verified_vs_oracle']}", flush=True)
+    path = os.path.join(out_dir, "mixed_workload.json")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {path}")
+    n_bad = sum(not r["verified_vs_oracle"] for r in rows)
+    if n_bad:
+        raise SystemExit(f"{n_bad}/{len(rows)} cells NOT verified vs oracle")
+    return rows
+
+
+def smoke():
+    """CI cell: insert-heavy zipfian trace on one index, threshold low
+    enough to force at least one compaction; fails on any unverified op
+    or on a run that never compacted."""
+    rows = run(n_ops=min(N_OPS, 2_000), n_keys=min(C.N_KEYS, 20_000),
+               datasets=["amzn"], indexes=["rmi"],
+               mix_points=[("ycsb_a", "zipfian")])
+    if rows[0]["compactions"] < 1:
+        raise SystemExit("smoke cell performed no compaction")
+    return rows
+
+
+if __name__ == "__main__":
+    smoke() if "--smoke" in sys.argv[1:] else run()

@@ -24,8 +24,9 @@ os.environ.setdefault("SOSD_Q", "50000")
 
 def main() -> None:
     from benchmarks import (batching_effects, build_times, explain, key_size,
-                            moe_dispatch, pareto, parallel_scaling, scaling,
-                            search_fn, serve_throughput)
+                            mixed_workload, moe_dispatch, pareto,
+                            parallel_scaling, scaling, search_fn,
+                            serve_throughput)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -45,6 +46,10 @@ def main() -> None:
         ("serve_throughput", serve_throughput.run,
          lambda rows: f"verified={sum(r['verified_vs_core'] for r in rows)}"
                       f"/{len(rows)}"),
+        ("mixed_workload", mixed_workload.run,
+         lambda rows: f"verified={sum(r['verified_vs_oracle'] for r in rows)}"
+                      f"/{len(rows)};compactions="
+                      f"{sum(r['compactions'] for r in rows)}"),
     ]
     for name, fn, derive in jobs:
         t0 = time.perf_counter()

@@ -156,6 +156,11 @@ def build(
         a2_j, b2_j, jnp.asarray(u[lpn]), jnp.asarray(ne2)))
     np.maximum.at(err, ne2, np.abs(apred - lpn.astype(np.float64)))
 
+    # A bound of +-(n+1) already covers the whole array, so larger errors
+    # carry no information — and uncapped they overflow the int64 cast on
+    # key sets mixing tiny and ~2^64-scale keys (a steep stage-2 slope
+    # evaluated at a far boundary key can reach ~1e20).
+    err = np.minimum(err, float(n) + 1.0)
     err_i = np.ceil(err).astype(np.int64) + 1  # +1: interior-gap safety margin
     max_err = int(err_i.max()) if B else 1
 

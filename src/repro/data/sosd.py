@@ -24,12 +24,14 @@ from __future__ import annotations
 
 import hashlib
 import os
+import shutil
+import subprocess
 import warnings
 
 import numpy as np
 
-__all__ = ["DATASETS", "SOSD_SOURCES", "generate", "load_real",
-           "make_queries"]
+__all__ = ["DATASETS", "SOSD_SOURCES", "SOSD_URL_BASE", "fetch_real",
+           "generate", "load_real", "make_queries"]
 
 
 def _finalize(raw: np.ndarray, n: int, rng: np.random.Generator) -> np.ndarray:
@@ -208,14 +210,96 @@ def load_real(name: str, n: int, sosd_dir: str, seed: int = 0) -> np.ndarray:
     return keys[pos]
 
 
+# ---------------------------------------------------------------------------
+# Online fetch (env-gated: REPRO_SOSD_FETCH=1; CI never takes this path)
+# ---------------------------------------------------------------------------
+
+#: Host publishing the zstd-compressed SOSD binaries (the same one the
+#: SOSD repo's own `scripts/download.sh` pulls from).  Override with
+#: ``REPRO_SOSD_URL`` for a mirror.
+SOSD_URL_BASE = "https://dataset.dws.informatik.uni-mannheim.de/sosd/data/"
+
+
+def _decompress_zstd(src: str, dst: str) -> None:
+    """Decompress ``src`` (.zst) to ``dst`` via whichever zstd the host
+    has: the `zstandard` module, else the `zstd` CLI.  The container
+    bakes in neither a network nor zstd, so this is a gated capability,
+    not a dependency — a clear error beats a silent pip install."""
+    try:
+        import zstandard  # optional; never installed by us
+    except ImportError:
+        zstandard = None
+    if zstandard is not None:
+        with open(src, "rb") as fin, open(dst, "wb") as fout:
+            zstandard.ZstdDecompressor().copy_stream(fin, fout)
+        return
+    cli = shutil.which("zstd")
+    if cli:
+        subprocess.run([cli, "-d", "-f", "-o", dst, src], check=True)
+        return
+    raise RuntimeError(
+        "no zstd decompressor available (install the `zstandard` module "
+        "or the `zstd` CLI to use the SOSD online fetch)")
+
+
+def fetch_real(name: str, dest_dir: str, url_base: str | None = None,
+               force: bool = False, chunk: int = 1 << 20) -> str:
+    """Download + decompress one published SOSD binary into ``dest_dir``.
+
+    Writes the decompressed uint64 binary under its canonical
+    `SOSD_SOURCES` name plus a ``<file>.sha256`` sidecar (the digest
+    `load_real` verifies on every subsequent load), both via
+    temp-then-rename so a killed download can't masquerade as a
+    complete file.  Returns the binary's path.  Network access happens
+    only here — `generate` calls this solely when ``REPRO_SOSD_FETCH``
+    is set, so CI and offline hosts never touch the network path.
+    """
+    import urllib.request
+
+    path = os.path.join(dest_dir, SOSD_SOURCES[name])
+    if os.path.exists(path) and not force:
+        return path
+    os.makedirs(dest_dir, exist_ok=True)
+    base = url_base or os.environ.get("REPRO_SOSD_URL") or SOSD_URL_BASE
+    url = base + SOSD_SOURCES[name] + ".zst"
+    zst_tmp, bin_tmp = path + ".zst.part", path + ".part"
+    try:
+        with urllib.request.urlopen(url) as resp, open(zst_tmp, "wb") as out:
+            while True:
+                block = resp.read(chunk)
+                if not block:
+                    break
+                out.write(block)
+        _decompress_zstd(zst_tmp, bin_tmp)
+        digest = _sha256(bin_tmp)
+        with open(path + ".sha256", "w") as f:
+            f.write(f"{digest}  {SOSD_SOURCES[name]}\n")
+        os.replace(bin_tmp, path)
+    finally:
+        for tmp in (zst_tmp, bin_tmp):
+            if os.path.exists(tmp):
+                os.remove(tmp)
+    return path
+
+
 def generate(name: str, n: int, seed: int = 0) -> np.ndarray:
     """``n`` sorted unique uint64 keys: the real SOSD dataset when
-    ``REPRO_SOSD_DIR`` is set and holds the binary, else the surrogate."""
+    ``REPRO_SOSD_DIR`` is set and holds the binary (with
+    ``REPRO_SOSD_FETCH=1``, downloading it first), else the surrogate."""
     sosd_dir = os.environ.get("REPRO_SOSD_DIR")
     if sosd_dir:
         try:
             return load_real(name, n, sosd_dir, seed=seed)
         except FileNotFoundError:
+            if os.environ.get("REPRO_SOSD_FETCH"):
+                try:
+                    fetch_real(name, sosd_dir)
+                    return load_real(name, n, sosd_dir, seed=seed)
+                except Exception as e:  # noqa: BLE001 — offline host: fall through
+                    warnings.warn(
+                        f"SOSD fetch of {SOSD_SOURCES[name]} failed ({e}); "
+                        f"using the {name} surrogate", stacklevel=2)
+                    return DATASETS[name](n, seed)
             warnings.warn(
                 f"REPRO_SOSD_DIR={sosd_dir} has no {SOSD_SOURCES[name]}; "
                 f"using the {name} surrogate", stacklevel=2)
@@ -230,13 +314,13 @@ def make_queries(
 ) -> np.ndarray:
     """Lookup workload: sampled present keys + uniform absent keys (paper
     samples lookups from the key set; absent keys exercise the §2 validity
-    definition for all integers)."""
-    rng = np.random.default_rng(seed + 1)
-    n_present = int(m * present_frac)
-    present = keys[rng.integers(0, len(keys), n_present)]
-    lo, hi = int(keys[0]), int(keys[-1])
-    absent = rng.integers(max(lo - 1000, 0), hi + 1000, size=m - n_present,
-                          dtype=np.uint64)
-    q = np.concatenate([present, absent])
-    rng.shuffle(q)
-    return q.astype(np.uint64)
+    definition for all integers).
+
+    Delegates to the seeded `repro.workloads` generator — the uniform
+    draw sequence is bit-identical to what this function historically
+    produced in-line, so every benchmark's query stream is unchanged
+    (pinned by tests/test_workloads_mutable.py)."""
+    from repro.workloads import make_point_queries
+
+    return make_point_queries(keys, m, seed=seed + 1,
+                              present_frac=present_frac, dist="uniform")

@@ -1,0 +1,16 @@
+"""`repro.mutable` — a write path for the learned indexes (DESIGN.md §10).
+
+The source paper's indexes are frozen at build time; this package adds
+the standard delta-buffer design its successors benchmark: inserts land
+in a small sorted `DeltaBuffer`, lookups merge the base index's fused
+result with a bounded search over the delta by *rank correction*
+(``LB_merged = LB_base + LB_delta`` — lower bounds over disjoint sorted
+sets add), and a threshold-triggered compaction rebuilds base+delta into
+a fresh generation published through the serving registry's atomic
+hot-swap.
+"""
+from repro.mutable.delta import UINT64_MAX, DeltaBuffer
+from repro.mutable.index import LB_INDEXES, MutableIndex, MutableView
+
+__all__ = ["UINT64_MAX", "DeltaBuffer", "LB_INDEXES", "MutableIndex",
+           "MutableView"]

@@ -1,0 +1,194 @@
+"""Mutable learned index: base generation + delta, merged by rank sum.
+
+The merged lookup is one jitted program per base generation:
+
+    LB_merged(q) = LB_base(q) + LB_delta(q)
+
+`LB_base` is the canonical fused pipeline (index bounds + bounded
+last-mile search, `core/search.fused_lookup_fn`) already compiled into
+the generation; `LB_delta` is a vectorized `searchsorted` over the
+padded device delta.  Base and delta are disjoint sorted sets, so the
+two lower bounds add exactly — every position the read path returns is
+identical to a lookup over the fully merged sorted array (the invariant
+`tests/test_workloads_mutable.py` pins against `oracle_replay` for
+every LB-capable index type x dataset).
+
+Concurrency model (DESIGN.md §10.3): the only mutable cell is one
+`MutableView` pointer.  Inserts and compaction-publish replace it under
+a mutation lock; readers grab the current view with one lock-free-ish
+read and keep a fully consistent (generation, delta) PAIR for the whole
+batch — swapping either half atomically with the other is exactly what
+prevents double counting when a compaction folds delta keys into a new
+base.  Compaction itself (merge + rebuild) runs outside every lock and
+publishes through `IndexRegistry.build_and_publish`, the serving
+registry's atomic hot-swap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.mutable.delta import PAD_QUANTUM, DeltaBuffer
+from repro.serve.lookup.registry import (DEFAULT_NAME, Generation,
+                                         IndexRegistry)
+
+__all__ = ["LB_INDEXES", "MutableIndex", "MutableView", "make_merged_fn"]
+
+#: Index types with lower-bound semantics — the ones a delta can merge
+#: with by rank correction.  `robin_hash` is point-only (no LB, paper
+#: §4.1.1) and stays read-only.
+LB_INDEXES = ("rmi", "pgm", "radix_spline", "btree", "ibtree", "rbs",
+              "binary_search")
+
+
+def make_merged_fn(base_fn: Callable) -> Callable:
+    """jit'd merged lookup: (queries, padded delta) -> merged positions.
+
+    The delta is an ARGUMENT, not a closure constant: the compile cache
+    keys on (query bucket, delta bucket) shapes only, so insert traffic
+    re-uses the compiled program until the delta crosses a pow-2 pad
+    boundary."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def merged(q, delta_padded):
+        lb_base = base_fn(q).astype(jnp.int64)
+        lb_delta = jnp.searchsorted(delta_padded, q, side="left")
+        return lb_base + lb_delta.astype(jnp.int64)
+
+    return merged
+
+
+@dataclasses.dataclass(frozen=True)
+class MutableView:
+    """One immutable (generation, delta) snapshot — the unit readers pin."""
+
+    generation: Generation
+    base_np: np.ndarray        # host copy of the generation's sorted keys
+    delta: DeltaBuffer
+    merged_fn: Callable        # shared per generation across delta updates
+
+    def lookup(self, q):
+        """Device merged lookup; `q` is a jnp/np uint64 batch."""
+        return self.merged_fn(q, self.delta.device)
+
+    @property
+    def n_keys(self) -> int:
+        """Logical key count of the merged view."""
+        return int(self.base_np.size) + self.delta.count
+
+
+class MutableIndex:
+    """Delta-buffered writes + merged reads over one registry name."""
+
+    def __init__(self, keys: np.ndarray, index: str = "rmi",
+                 hyper: Optional[Dict[str, Any]] = None,
+                 last_mile: Optional[str] = None,
+                 compact_threshold: int = 4096,
+                 registry: Optional[IndexRegistry] = None,
+                 name: str = DEFAULT_NAME,
+                 pad_quantum: int = PAD_QUANTUM):
+        if compact_threshold < 1:
+            raise ValueError("compact_threshold must be >= 1")
+        self.index = index
+        self.hyper = dict(hyper or {})
+        self.last_mile = last_mile
+        self.compact_threshold = int(compact_threshold)
+        self.registry = registry if registry is not None else IndexRegistry()
+        self.name = name
+        self.pad_quantum = int(pad_quantum)
+        self._mu = threading.Lock()          # view-pointer mutations
+        self._compact_mu = threading.Lock()  # one compaction at a time
+        self._view: Optional[MutableView] = None
+        self.reset(keys)
+
+    # -- lifecycle -------------------------------------------------------
+    def _publish_base(self, keys: np.ndarray) -> MutableView:
+        keys = np.asarray(keys, dtype=np.uint64)
+        gen = self.registry.build_and_publish(
+            self.index, keys, hyper=self.hyper, name=self.name,
+            last_mile=self.last_mile)
+        return MutableView(generation=gen, base_np=keys,
+                           delta=DeltaBuffer.empty(self.pad_quantum),
+                           merged_fn=make_merged_fn(gen.fn))
+
+    def reset(self, keys: np.ndarray) -> MutableView:
+        """Replace the whole key set: fresh base, empty delta."""
+        view = self._publish_base(keys)
+        with self._mu:
+            self._view = view
+        return view
+
+    # -- read side -------------------------------------------------------
+    def view(self) -> MutableView:
+        with self._mu:
+            return self._view
+
+    def lookup(self, q) -> np.ndarray:
+        """Host convenience: merged LB positions as int64 numpy."""
+        import jax.numpy as jnp
+
+        q = jnp.asarray(np.asarray(q, dtype=np.uint64))
+        return np.asarray(self.view().lookup(q), dtype=np.int64)
+
+    # -- write side ------------------------------------------------------
+    def insert(self, keys) -> np.ndarray:
+        """Admit keys into the delta (set semantics); returns the 0/1
+        admitted flag per input key."""
+        with self._mu:
+            view = self._view
+            delta, admitted = view.delta.with_inserted(view.base_np, keys)
+            if delta is not view.delta:
+                self._view = dataclasses.replace(view, delta=delta)
+        return admitted
+
+    @property
+    def delta_count(self) -> int:
+        return self.view().delta.count
+
+    @property
+    def needs_compaction(self) -> bool:
+        return self.delta_count >= self.compact_threshold
+
+    # -- compaction ------------------------------------------------------
+    def compact(self) -> Optional[Generation]:
+        """Fold the current delta into a fresh base generation.
+
+        Snapshot -> merge -> rebuild -> hot-swap publish.  The rebuild
+        (seconds of host numpy) runs outside every lock; the publish +
+        pointer swap hold the mutation lock and are cheap, so inserts
+        admitted DURING the rebuild are preserved: the new view keeps
+        exactly the keys the snapshot did not cover.  If a `reset`
+        replaced the whole key set mid-rebuild, the snapshot's
+        generation is no longer current and the rebuild is DISCARDED —
+        publishing it would resurrect the discarded key set.  Returns
+        the new generation, or None if the delta was empty or the
+        rebuild was abandoned.
+        """
+        import jax.numpy as jnp
+
+        from repro.core import base
+
+        with self._compact_mu:
+            snap = self.view()
+            if snap.delta.count == 0:
+                return None
+            merged_keys = np.concatenate([snap.base_np, snap.delta.keys_np])
+            merged_keys.sort(kind="stable")
+            build = base.REGISTRY[self.index](merged_keys, **self.hyper)
+            data = jnp.asarray(merged_keys)
+            with self._mu:
+                if self._view.generation is not snap.generation:
+                    return None   # reset() raced the rebuild: stale, drop it
+                gen = self.registry.publish(build, data, name=self.name,
+                                            last_mile=self.last_mile)
+                leftover = self._view.delta.minus(snap.delta)
+                self._view = MutableView(generation=gen,
+                                         base_np=merged_keys,
+                                         delta=leftover,
+                                         merged_fn=make_merged_fn(gen.fn))
+            return gen

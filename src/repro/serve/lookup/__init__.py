@@ -8,15 +8,19 @@ one device-sharded fused lookup (index bounds + last-mile fixup) over the
 generations hot-swap atomically: a rebuild on a fresh key set becomes
 visible between batches, never inside one.
 """
-from repro.serve.lookup.admission import LookupFuture, MicroBatcher
+from repro.serve.lookup.admission import (ClientBacklogFull, LookupFuture,
+                                          MicroBatcher)
 from repro.serve.lookup.dispatch import ShardedDispatcher, make_lookup_fn
 from repro.serve.lookup.metrics import ServiceMetrics
+from repro.serve.lookup.mutable_service import (MutableLookupService,
+                                                MutableLookupServiceConfig)
 from repro.serve.lookup.registry import Generation, IndexRegistry
 from repro.serve.lookup.service import (DEFAULT_HYPER, LookupService,
                                         LookupServiceConfig)
 
 __all__ = [
     "DEFAULT_HYPER",
+    "ClientBacklogFull",
     "LookupFuture",
     "MicroBatcher",
     "ShardedDispatcher",
@@ -26,4 +30,6 @@ __all__ = [
     "IndexRegistry",
     "LookupService",
     "LookupServiceConfig",
+    "MutableLookupService",
+    "MutableLookupServiceConfig",
 ]

@@ -14,6 +14,18 @@ after every earlier request's future (batches are dispatched by a single
 flusher, in take order).  A request larger than ``max_batch`` is not
 split — it forms an oversize batch on its own; the dispatcher pads to a
 power-of-two bucket anyway, so the compile-cache cost is the same.
+
+Fairness (optional): with ``max_client_keys`` set, a client that passes
+its id to ``submit`` may hold at most that many pending keys — the
+(minimal) defense against one client monopolizing every flush window.
+Over-cap submits raise `ClientBacklogFull` immediately (backpressure at
+admission, the cheapest point); the strict-FIFO default behavior is
+unchanged when the cap is unset or the client anonymous.
+
+Requests carry a ``kind`` tag ("read" by default); the mutable service
+admits inserts through the same queue with ``kind="insert"``, so reads
+and writes share one admission order — the property the oracle-replay
+invariant is stated against.
 """
 from __future__ import annotations
 
@@ -26,6 +38,10 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.serve.common import MonotonicCounter
+
+
+class ClientBacklogFull(RuntimeError):
+    """Raised at submit() when a client exceeds its pending-key cap."""
 
 
 class LookupFuture:
@@ -64,24 +80,32 @@ class PendingRequest:
     keys: np.ndarray          # 1-D uint64
     future: LookupFuture
     t_submit: float           # perf_counter at admission
+    kind: str = "read"        # "read" | "insert" (mutable service)
+    client: Optional[object] = None   # fairness-cap accounting id
 
 
 class MicroBatcher:
     """Thread-safe admission queue with size/deadline flush policy."""
 
     def __init__(self, max_batch: int, deadline_s: float,
-                 counter: Optional[MonotonicCounter] = None):
+                 counter: Optional[MonotonicCounter] = None,
+                 max_client_keys: Optional[int] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if max_client_keys is not None and max_client_keys < 1:
+            raise ValueError("max_client_keys must be >= 1")
         self.max_batch = int(max_batch)
         self.deadline_s = float(deadline_s)
+        self.max_client_keys = max_client_keys
         self._counter = counter if counter is not None else MonotonicCounter()
         self._pending: "collections.deque[PendingRequest]" = collections.deque()
         self._n_keys = 0
+        self._client_keys: dict = {}
         self._cond = threading.Condition()
 
     # -- admission -------------------------------------------------------
-    def submit(self, keys) -> Tuple[int, LookupFuture]:
+    def submit(self, keys, kind: str = "read",
+               client=None) -> Tuple[int, LookupFuture]:
         # Always copy: the request may sit queued for deadline_s, and a
         # client reusing its buffer must not mutate keys already admitted.
         keys = np.array(keys, dtype=np.uint64, copy=True).ravel()
@@ -89,12 +113,24 @@ class MicroBatcher:
             raise ValueError("empty key array")
         rid = self._counter.next()
         fut = LookupFuture(rid, keys.size)
-        req = PendingRequest(rid, keys, fut, time.perf_counter())
+        req = PendingRequest(rid, keys, fut, time.perf_counter(),
+                             kind=kind, client=client)
         with self._cond:
+            if self.max_client_keys is not None and client is not None:
+                held = self._client_keys.get(client, 0)
+                if held + keys.size > self.max_client_keys:
+                    raise ClientBacklogFull(
+                        f"client {client!r} holds {held} pending keys; "
+                        f"+{keys.size} exceeds cap {self.max_client_keys}")
+                self._client_keys[client] = held + keys.size
             self._pending.append(req)
             self._n_keys += keys.size
             self._cond.notify_all()
         return rid, fut
+
+    def pending_keys_of(self, client) -> int:
+        with self._cond:
+            return self._client_keys.get(client, 0)
 
     # -- introspection ---------------------------------------------------
     @property
@@ -161,4 +197,11 @@ class MicroBatcher:
                 out.append(self._pending.popleft())
                 taken += nxt.keys.size
             self._n_keys -= taken
+            for r in out:
+                if r.client is not None and r.client in self._client_keys:
+                    left = self._client_keys[r.client] - r.keys.size
+                    if left > 0:
+                        self._client_keys[r.client] = left
+                    else:
+                        del self._client_keys[r.client]
             return out

@@ -1,10 +1,13 @@
-"""Per-batch serving metrics (DESIGN.md §9.4).
+"""Per-batch serving metrics (DESIGN.md §9.4, §10.5).
 
 Everything the throughput benchmark and the ops story need, with no
 dependencies: a log-spaced latency histogram (fixed memory, exact enough
 for p50/p99 at 5% bucket resolution), batch occupancy (real keys /
 padded dispatch width — the price of the deadline trigger), and
-aggregate lookups/sec over the serving window.
+aggregate lookups/sec over the serving window.  The mutable service
+adds write-side observations: insert batches/admissions, the current
+delta occupancy gauge (delta keys / compaction threshold), and
+compaction count + latency.
 """
 from __future__ import annotations
 
@@ -69,6 +72,16 @@ class ServiceMetrics:
         self.sum_occupancy = 0.0
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
+        # -- write side (mutable service; zero for read-only services) --
+        self.insert_latency = LatencyHistogram()
+        self.compaction_latency = LatencyHistogram()
+        self.n_insert_batches = 0
+        self.n_insert_keys = 0
+        self.n_admitted = 0
+        self.n_compactions = 0
+        self.n_compaction_failures = 0
+        self.delta_keys = 0
+        self.delta_threshold = 0
 
     def observe_batch(self, *, n_keys: int, padded: int, n_requests: int,
                       t_oldest_submit: float, t_start: float,
@@ -83,6 +96,33 @@ class ServiceMetrics:
             if self.t_first is None:
                 self.t_first = t_start
             self.t_last = t_end
+
+    def observe_insert_batch(self, *, n_keys: int, admitted: int,
+                             t_start: float, t_end: float) -> None:
+        with self._lock:
+            self.n_insert_batches += 1
+            self.n_insert_keys += n_keys
+            self.n_admitted += admitted
+            self.insert_latency.record(t_end - t_start)
+            if self.t_first is None:
+                self.t_first = t_start
+            self.t_last = t_end
+
+    def observe_compaction(self, *, duration_s: float) -> None:
+        # counts + latency only: the delta gauge has a single writer
+        # (`set_delta_gauge`, fed the real post-compaction count)
+        with self._lock:
+            self.n_compactions += 1
+            self.compaction_latency.record(duration_s)
+
+    def observe_compaction_failure(self) -> None:
+        with self._lock:
+            self.n_compaction_failures += 1
+
+    def set_delta_gauge(self, *, delta_keys: int, threshold: int) -> None:
+        with self._lock:
+            self.delta_keys = int(delta_keys)
+            self.delta_threshold = int(threshold)
 
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
@@ -100,4 +140,15 @@ class ServiceMetrics:
                 "p99_batch_ms": self.batch_latency.quantile(0.99) * 1e3,
                 "mean_queue_ms": self.queue_latency.mean * 1e3,
                 "p99_queue_ms": self.queue_latency.quantile(0.99) * 1e3,
+                "insert_batches": self.n_insert_batches,
+                "insert_keys": self.n_insert_keys,
+                "admitted": self.n_admitted,
+                "mean_insert_ms": self.insert_latency.mean * 1e3,
+                "compactions": self.n_compactions,
+                "compaction_failures": self.n_compaction_failures,
+                "mean_compaction_ms": self.compaction_latency.mean * 1e3,
+                "p99_compaction_ms": self.compaction_latency.quantile(0.99) * 1e3,
+                "delta_keys": self.delta_keys,
+                "delta_occupancy": (self.delta_keys / self.delta_threshold
+                                    if self.delta_threshold else 0.0),
             }

@@ -1,0 +1,180 @@
+"""`MutableLookupService`: reads AND writes through one admission queue.
+
+The mutable face of the lookup service (DESIGN.md §10.5).  Inserts are
+admitted through the very same `MicroBatcher` as reads — tagged
+``kind="insert"`` — so a single flusher sees one total admission order
+and applies it faithfully: a taken batch is split into consecutive
+same-kind runs; insert runs land in the `MutableIndex` delta (futures
+resolve to per-key 0/1 admitted flags), read runs pin ONE
+(generation, delta) view and dispatch the merged lookup through the
+sharded dispatcher.  That ordering is exactly what the oracle-replay
+invariant is stated against: any read admitted after an insert observes
+it once flushed.
+
+Compaction: after an insert run pushes the delta past
+``compact_threshold``, a background compaction thread folds base+delta
+into a fresh generation via `IndexRegistry.build_and_publish` (the §9.3
+hot-swap — rebuilds never block admission or dispatch) and prunes the
+delta to the keys admitted mid-rebuild.  Reads in flight complete
+against the view they pinned; compaction never changes merged content,
+only where it lives, so results are invariant across the swap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.lookup.admission import LookupFuture
+from repro.serve.lookup.registry import DEFAULT_NAME, Generation
+from repro.serve.lookup.service import LookupService, LookupServiceConfig
+
+__all__ = ["MutableLookupService", "MutableLookupServiceConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MutableLookupServiceConfig(LookupServiceConfig):
+    compact_threshold: int = 4096   # delta keys that trigger a compaction
+    auto_compact: bool = True       # spawn the background compactor
+
+
+class MutableLookupService(LookupService):
+    #: seconds to wait before respawning the compactor after a failed
+    #: compaction — bounds rebuild churn when every rebuild is doomed
+    #: (e.g. a builder bug on the merged key set)
+    COMPACT_RETRY_BACKOFF_S = 5.0
+
+    def __init__(self, keys: np.ndarray,
+                 config: Optional[MutableLookupServiceConfig] = None,
+                 mesh=None, counter=None):
+        self.mindex = None   # MutableIndex, created by the first swap_keys
+        self._compact_thread: Optional[threading.Thread] = None
+        self._compact_spawn_mu = threading.Lock()
+        self._compact_fail_t: Optional[float] = None
+        self.last_compaction_error: Optional[BaseException] = None
+        cfg = config if config is not None else MutableLookupServiceConfig()
+        super().__init__(keys, config=cfg, mesh=mesh, counter=counter)
+
+    # -- index lifecycle -------------------------------------------------
+    def swap_keys(self, keys: np.ndarray) -> Generation:
+        """Replace the WHOLE key set (fresh base, empty delta)."""
+        # deferred import: repro.mutable depends on this package's registry
+        from repro.mutable.index import MutableIndex
+
+        if self.mindex is None:
+            self.mindex = MutableIndex(
+                keys, index=self.cfg.index, hyper=self.cfg.hyper,
+                last_mile=self.cfg.last_mile,
+                compact_threshold=self.cfg.compact_threshold,
+                registry=self.registry, name=DEFAULT_NAME,
+                pad_quantum=self.cfg.pad_quantum)
+            view = self.mindex.view()
+        else:
+            view = self.mindex.reset(keys)
+        self.metrics.set_delta_gauge(
+            delta_keys=0, threshold=self.cfg.compact_threshold)
+        return view.generation
+
+    # -- client surface --------------------------------------------------
+    def insert(self, keys, client=None) -> LookupFuture:
+        """Admit an insert request; the future resolves to an int64 0/1
+        admitted flag per input key (0 = key already present)."""
+        _, fut = self.batcher.submit(keys, kind="insert", client=client)
+        return fut
+
+    # -- flusher ---------------------------------------------------------
+    def _process_batch(self, batch) -> None:
+        i = 0
+        while i < len(batch):
+            j = i
+            while j < len(batch) and batch[j].kind == batch[i].kind:
+                j += 1
+            run = batch[i:j]
+            if batch[i].kind == "insert":
+                self._apply_inserts(run)
+            else:
+                self._dispatch_reads(run)
+            i = j
+
+    def _pinned_lookup_fn(self):
+        """Reads pin one immutable (generation, delta) PAIR — the atomic
+        unit that keeps a concurrent compaction from being observed
+        half-applied (delta key counted twice or dropped)."""
+        return self.mindex.view().lookup
+
+    def _apply_inserts(self, run) -> None:
+        keys = (run[0].keys if len(run) == 1
+                else np.concatenate([r.keys for r in run]))
+        t0 = time.perf_counter()
+        try:
+            admitted = self.mindex.insert(keys)
+        except BaseException as e:  # noqa: BLE001 — fail the run, not the flusher
+            for r in run:
+                r.future._set_exception(e)
+            return
+        t1 = time.perf_counter()
+        off = 0
+        for r in run:
+            r.future._set_result(admitted[off:off + r.keys.size])
+            off += r.keys.size
+        self.metrics.observe_insert_batch(
+            n_keys=keys.size, admitted=int(admitted.sum()),
+            t_start=t0, t_end=t1)
+        self.metrics.set_delta_gauge(
+            delta_keys=self.mindex.delta_count,
+            threshold=self.mindex.compact_threshold)
+        if self.cfg.auto_compact and self.mindex.needs_compaction:
+            self._spawn_compaction()
+
+    # -- compaction ------------------------------------------------------
+    def _spawn_compaction(self) -> None:
+        with self._compact_spawn_mu:
+            if self._compact_thread is not None and self._compact_thread.is_alive():
+                return   # one compactor at a time; it re-checks on exit
+            if (self._compact_fail_t is not None
+                    and time.perf_counter() - self._compact_fail_t
+                    < self.COMPACT_RETRY_BACKOFF_S):
+                return   # recent failure: back off instead of churning
+            t = threading.Thread(target=self._compact_and_record,
+                                 name="lookup-compactor", daemon=True)
+            self._compact_thread = t
+            t.start()
+
+    def _compact_and_record(self, reraise: bool = False) -> Optional[Generation]:
+        t0 = time.perf_counter()
+        try:
+            gen = self.mindex.compact()
+        except BaseException as e:  # noqa: BLE001 — observable, not thread-fatal
+            self.metrics.observe_compaction_failure()
+            self.last_compaction_error = e
+            self._compact_fail_t = time.perf_counter()
+            if reraise:
+                raise
+            return None
+        if gen is None:
+            return None
+        self._compact_fail_t = None
+        self.last_compaction_error = None
+        self.metrics.observe_compaction(duration_s=time.perf_counter() - t0)
+        self.metrics.set_delta_gauge(
+            delta_keys=self.mindex.delta_count,
+            threshold=self.mindex.compact_threshold)
+        return gen
+
+    def force_compact(self) -> Optional[Generation]:
+        """Synchronous compaction (tests/benchmarks); waits for any
+        in-flight background compaction first, then folds what remains.
+        Unlike the background path, a failing rebuild raises here."""
+        t = self._compact_thread
+        if t is not None and t.is_alive():
+            t.join()
+        return self._compact_and_record(reraise=True)
+
+    def stop(self) -> None:
+        super().stop()
+        t = self._compact_thread
+        if t is not None and t.is_alive():
+            t.join()

@@ -50,6 +50,7 @@ class LookupServiceConfig:
     max_batch: int = 4096              # keys per dispatch (flush trigger)
     deadline_ms: float = 2.0           # oldest-request flush deadline
     pad_quantum: int = PAD_QUANTUM
+    max_client_keys: Optional[int] = None   # per-client pending-key cap
 
 
 class LookupService:
@@ -63,7 +64,8 @@ class LookupService:
         self.metrics = ServiceMetrics()
         self.batcher = MicroBatcher(
             self.cfg.max_batch, self.cfg.deadline_ms / 1e3,
-            counter=counter if counter is not None else MonotonicCounter())
+            counter=counter if counter is not None else MonotonicCounter(),
+            max_client_keys=self.cfg.max_client_keys)
         self._dispatch_lock = threading.Lock()   # one batch at a time
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -81,12 +83,14 @@ class LookupService:
         return self.registry.current()
 
     # -- client surface --------------------------------------------------
-    def submit(self, keys) -> LookupFuture:
+    def submit(self, keys, client=None) -> LookupFuture:
         """Admit one request; never blocks.  Completion needs a flusher:
         either the background thread (`start()`/`with svc:`) or explicit
         `flush()`/`drain()` calls — a future submitted with neither
-        stays pending until one of them runs."""
-        _, fut = self.batcher.submit(keys)
+        stays pending until one of them runs.  ``client`` is an optional
+        fairness id: with `max_client_keys` configured, an over-backlog
+        client's submit raises `ClientBacklogFull` instead of queueing."""
+        _, fut = self.batcher.submit(keys, client=client)
         return fut
 
     def lookup(self, keys, timeout: Optional[float] = 30.0) -> np.ndarray:
@@ -98,7 +102,7 @@ class LookupService:
 
     # -- flushing --------------------------------------------------------
     def _dispatch_once(self, force: bool = False) -> bool:
-        """Take + dispatch one batch; returns whether one was dispatched.
+        """Take + process one batch; returns whether one was taken.
 
         Serialized by `_dispatch_lock`: take order == dispatch order ==
         completion order, which is the FIFO guarantee.
@@ -107,28 +111,41 @@ class LookupService:
             batch = self.batcher.take(force=force)
             if not batch:
                 return False
-            gen = self.registry.current()   # pinned for this whole batch
-            keys = (batch[0].keys if len(batch) == 1
-                    else np.concatenate([r.keys for r in batch]))
-            t0 = time.perf_counter()
-            try:
-                out = self.dispatcher(gen.fn, keys)
-            except BaseException as e:  # noqa: BLE001 — fail the batch, not the flusher
-                for r in batch:
-                    r.future._set_exception(e)
-                return True
-            t1 = time.perf_counter()
-            off = 0
-            for r in batch:
-                r.future._set_result(out[off:off + r.keys.size])
-                off += r.keys.size
-            self.metrics.observe_batch(
-                n_keys=keys.size,
-                padded=self.dispatcher.padded_size(keys.size),
-                n_requests=len(batch),
-                t_oldest_submit=batch[0].t_submit,
-                t_start=t0, t_end=t1)
+            self._process_batch(batch)
             return True
+
+    def _process_batch(self, batch) -> None:
+        """Hook for subclasses; the base service only has read requests."""
+        self._dispatch_reads(batch)
+
+    def _pinned_lookup_fn(self):
+        """The lookup callable one read batch completes against — read
+        exactly once per batch, so a hot-swap lands between batches,
+        never inside one."""
+        return self.registry.current().fn
+
+    def _dispatch_reads(self, batch) -> None:
+        fn = self._pinned_lookup_fn()   # pinned for this whole batch
+        keys = (batch[0].keys if len(batch) == 1
+                else np.concatenate([r.keys for r in batch]))
+        t0 = time.perf_counter()
+        try:
+            out = self.dispatcher(fn, keys)
+        except BaseException as e:  # noqa: BLE001 — fail the batch, not the flusher
+            for r in batch:
+                r.future._set_exception(e)
+            return
+        t1 = time.perf_counter()
+        off = 0
+        for r in batch:
+            r.future._set_result(out[off:off + r.keys.size])
+            off += r.keys.size
+        self.metrics.observe_batch(
+            n_keys=keys.size,
+            padded=self.dispatcher.padded_size(keys.size),
+            n_requests=len(batch),
+            t_oldest_submit=batch[0].t_submit,
+            t_start=t0, t_end=t1)
 
     def flush(self) -> bool:
         """Dispatch one due batch if any (size or deadline trigger)."""

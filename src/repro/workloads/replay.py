@@ -1,0 +1,83 @@
+"""Trace replay: the ground-truth oracle and the service driver.
+
+`oracle_replay` is deliberately naive — a plain sorted numpy array,
+`np.searchsorted` for every read, `np.insert` for every admitted insert.
+It shares no code with the delta/merge machinery it checks, which is
+what makes it an oracle: the mutable-index invariant (DESIGN.md §10.4)
+is "every op's result equals this replay's, at every step, across any
+number of compactions".
+
+`replay_on_service` drives a `MutableLookupService` through the same
+trace, preserving admission order (the order the oracle models), and
+returns the per-op results aligned with the oracle's output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.workloads.workload import OP_INSERT, Workload
+
+__all__ = ["oracle_replay", "replay_on_service"]
+
+
+def oracle_replay(base_keys: np.ndarray, wl: Workload) -> np.ndarray:
+    """Per-op ground truth: LB position for reads/ranges, 0/1 admitted
+    flag for inserts (set semantics — a present key is not re-inserted)."""
+    arr = np.asarray(base_keys, dtype=np.uint64).copy()
+    out = np.empty(wl.n_ops, dtype=np.int64)
+    for i in range(wl.n_ops):
+        k = wl.keys[i]
+        if wl.ops[i] == OP_INSERT:
+            p = int(np.searchsorted(arr, k, side="left"))
+            if p < len(arr) and arr[p] == k:
+                out[i] = 0
+            else:
+                arr = np.insert(arr, p, k)
+                out[i] = 1
+        else:
+            out[i] = int(np.searchsorted(arr, k, side="left"))
+    return out
+
+
+def replay_on_service(wl: Workload, svc, chunk: int = 64,
+                      timeout: Optional[float] = 60.0,
+                      compact_every: Optional[int] = None) -> np.ndarray:
+    """Drive a `MutableLookupService` through ``wl``; returns per-op
+    results aligned with `oracle_replay` (positions for reads/ranges,
+    admitted flags for inserts).
+
+    Consecutive same-op runs are submitted as one request (up to
+    ``chunk`` ops) — admission order equals trace order, which the
+    single-flusher FIFO then turns into apply order, so the results are
+    comparable to the oracle with no reordering bookkeeping.  When the
+    service has no background flusher, the queue is drained in-line.
+    ``compact_every`` forces a synchronous compaction every that many
+    ops (on top of the service's own threshold trigger) — the invariant
+    says results must not change, so replays use it to pin hot-swap
+    correctness mid-trace.
+    """
+    futs = []      # (start, end, future)
+    i = 0
+    next_compact = compact_every
+    while i < wl.n_ops:
+        j = i
+        op = wl.ops[i]
+        while j < wl.n_ops and wl.ops[j] == op and j - i < chunk:
+            j += 1
+        ks = wl.keys[i:j]
+        fut = svc.insert(ks) if op == OP_INSERT else svc.submit(ks)
+        futs.append((i, j, fut))
+        if svc._thread is None:
+            svc.drain()
+        if next_compact is not None and j >= next_compact:
+            svc.force_compact()
+            next_compact += compact_every
+        i = j
+    if svc._thread is None:
+        svc.drain()
+    out = np.empty(wl.n_ops, dtype=np.int64)
+    for start, end, fut in futs:
+        out[start:end] = fut.result(timeout)
+    return out

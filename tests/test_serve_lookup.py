@@ -12,9 +12,9 @@ import pytest
 from repro.core import base, search
 from repro.data import sosd
 from repro.serve.common import MonotonicCounter
-from repro.serve.lookup import (IndexRegistry, LookupService,
-                                LookupServiceConfig, MicroBatcher,
-                                ShardedDispatcher)
+from repro.serve.lookup import (ClientBacklogFull, IndexRegistry,
+                                LookupService, LookupServiceConfig,
+                                MicroBatcher, ShardedDispatcher)
 from repro.serve.lookup.metrics import LatencyHistogram, ServiceMetrics
 
 
@@ -82,6 +82,29 @@ def test_batcher_rejects_empty():
     b = MicroBatcher(max_batch=4, deadline_s=1.0)
     with pytest.raises(ValueError):
         b.submit(np.array([], np.uint64))
+
+
+def test_batcher_per_client_pending_cap():
+    b = MicroBatcher(max_batch=10_000, deadline_s=60.0, max_client_keys=100)
+    b.submit(np.arange(60, dtype=np.uint64) + 1, client="a")
+    b.submit(np.arange(60, dtype=np.uint64) + 1, client="b")   # independent
+    with pytest.raises(ClientBacklogFull):
+        b.submit(np.arange(50, dtype=np.uint64) + 1, client="a")
+    assert b.pending_keys_of("a") == 60
+    # anonymous submits are never capped (strict-FIFO default unchanged)
+    b.submit(np.arange(500, dtype=np.uint64) + 1)
+    assert b.pending_requests == 3
+    # a flush returns the budget
+    assert len(b.take(force=True)) == 3
+    assert b.pending_keys_of("a") == 0
+    b.submit(np.arange(100, dtype=np.uint64) + 1, client="a")  # fits again
+
+
+def test_batcher_cap_disabled_by_default():
+    b = MicroBatcher(max_batch=16, deadline_s=60.0)
+    for _ in range(5):
+        b.submit(np.arange(64, dtype=np.uint64) + 1, client="hog")
+    assert b.pending_requests == 5
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +322,100 @@ def test_service_metrics_occupancy_and_counts():
     assert s["lookups_per_s"] == pytest.approx(228 / 0.003)
 
 
+def test_latency_histogram_boundary_buckets():
+    h = LatencyHistogram()
+    h.record(0.0)                       # below the lowest bound -> bucket 0
+    assert h.counts[0] == 1
+    h.record(1e9)                       # beyond the top -> overflow bucket
+    assert h.counts[-1] == 1
+    assert h.quantile(1.0) == float("inf")
+    assert h.n == 2
+    # empty histogram is all zeros
+    empty = LatencyHistogram()
+    assert empty.quantile(0.5) == 0.0 and empty.mean == 0.0
+
+
+def test_latency_histogram_bucket_resolution_and_monotonicity():
+    h = LatencyHistogram()
+    rng = np.random.default_rng(0)
+    vals = 10 ** rng.uniform(-5, 0, size=2_000)    # 10us..1s, log-uniform
+    for v in vals:
+        h.record(v)
+    assert h.n == 2_000
+    assert h.mean == pytest.approx(vals.mean(), rel=1e-9)
+    qs = [h.quantile(q) for q in (0.1, 0.5, 0.9, 0.99)]
+    assert qs == sorted(qs)                        # quantiles are monotone
+    # each bucketed quantile brackets the exact one within the 5% growth
+    for q, got in zip((0.1, 0.5, 0.9, 0.99), qs):
+        exact = np.quantile(vals, q)
+        assert exact * 0.9 <= got <= exact * 1.2
+
+
+def test_service_metrics_write_side_snapshot():
+    m = ServiceMetrics()
+    m.observe_insert_batch(n_keys=64, admitted=50, t_start=0.0, t_end=0.004)
+    m.observe_insert_batch(n_keys=16, admitted=0, t_start=0.005, t_end=0.006)
+    m.set_delta_gauge(delta_keys=50, threshold=200)
+    s = m.snapshot()
+    assert s["insert_batches"] == 2 and s["insert_keys"] == 80
+    assert s["admitted"] == 50
+    assert s["mean_insert_ms"] == pytest.approx(2.5, rel=0.1)
+    assert s["delta_keys"] == 50
+    assert s["delta_occupancy"] == pytest.approx(0.25)
+    m.observe_compaction(duration_s=0.5)
+    m.set_delta_gauge(delta_keys=0, threshold=200)  # the single gauge writer
+    s = m.snapshot()
+    assert s["compactions"] == 1
+    assert s["compaction_failures"] == 0
+    assert s["delta_keys"] == 0
+    assert 400 < s["mean_compaction_ms"] < 700
+    assert 400 < s["p99_compaction_ms"]
+    m.observe_compaction_failure()
+    assert m.snapshot()["compaction_failures"] == 1
+
+
+def test_registry_swap_racing_concurrent_publishes():
+    """N writers hammer build_and_publish while readers continuously
+    verify whatever generation they observe against its own key set —
+    a torn or half-built publish would return wrong positions."""
+    key_sets = {s: sosd.generate("amzn", 3_000, seed=s) for s in range(3)}
+    reg = IndexRegistry()
+    g0 = reg.build_and_publish("rmi", key_sets[0], hyper=dict(branching=128))
+    stop = threading.Event()
+    errors = []
+    published = []                      # (GIL-atomic appends)
+
+    def reader():
+        while not stop.is_set():
+            gen = reg.current()
+            keys = np.asarray(gen.data, dtype=np.uint64)
+            q = keys[:: max(1, len(keys) // 64)]
+            pos = np.asarray(gen.fn(np.asarray(q)), np.int64)
+            if not np.array_equal(pos, base.lower_bound_oracle(keys, q)):
+                errors.append(gen.version)
+
+    def writer(seed):
+        for _ in range(4):
+            published.append(reg.build_and_publish(
+                "rmi", key_sets[seed], hyper=dict(branching=128)).version)
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    writers = [threading.Thread(target=writer, args=(s,)) for s in key_sets]
+    for t in readers + writers:
+        t.start()
+    for t in writers:
+        t.join(timeout=120.0)
+    stop.set()
+    for t in readers:
+        t.join(timeout=30.0)
+    assert not errors                   # every observed generation consistent
+    assert len(published) == 12
+    assert len(set(published)) == 12    # version ids never reused
+    assert reg.current().version in set(published)   # last writer won
+    assert reg.current().version != g0.version
+    assert reg.current().n_keys == 3_000
+
+
 # ---------------------------------------------------------------------------
 # real-SOSD loader (env-gated, checksum-verified)
 # ---------------------------------------------------------------------------
@@ -364,3 +481,113 @@ def test_load_real_truncated_file_raises(tmp_path):
         np.arange(10, dtype="<u8").tofile(f)              # holds 10
     with pytest.raises(ValueError, match="header promises"):
         sosd.load_real("face", 5, str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# online fetch (downloader is env-gated; these tests never touch the net)
+# ---------------------------------------------------------------------------
+def _fake_urlopen_for(payload: bytes, seen_urls):
+    import io
+
+    class _Resp(io.BytesIO):
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *exc):
+            return False
+
+    def fake(url, *a, **k):
+        seen_urls.append(url)
+        return _Resp(payload)
+
+    return fake
+
+
+def test_fetch_real_downloads_decompresses_and_writes_sidecar(
+        tmp_path, monkeypatch):
+    import shutil
+
+    raw = np.arange(1, 2_001, dtype=np.uint64) * 5
+    payload = (np.asarray([len(raw)], dtype="<u8").tobytes()
+               + raw.astype("<u8").tobytes())
+    urls = []
+    monkeypatch.setattr("urllib.request.urlopen",
+                        _fake_urlopen_for(payload, urls))
+    # stand-in decompressor: the "zst" payload is already the raw binary
+    monkeypatch.setattr(sosd, "_decompress_zstd",
+                        lambda src, dst: shutil.copyfile(src, dst))
+
+    path = sosd.fetch_real("wiki", str(tmp_path))
+    assert urls == [sosd.SOSD_URL_BASE + sosd.SOSD_SOURCES["wiki"] + ".zst"]
+    assert os.path.exists(path + ".sha256")       # sidecar written
+    assert not os.path.exists(path + ".zst.part") # temp files cleaned
+    got = sosd.load_real("wiki", 500, str(tmp_path))  # checksum-verified load
+    assert np.isin(got, raw).all()
+
+    # a present file short-circuits: no second download
+    monkeypatch.setattr("urllib.request.urlopen",
+                        lambda *a, **k: pytest.fail("re-downloaded"))
+    assert sosd.fetch_real("wiki", str(tmp_path)) == path
+
+
+def test_fetch_real_honors_url_override(tmp_path, monkeypatch):
+    import shutil
+
+    raw = np.arange(1, 1_001, dtype=np.uint64) * 3
+    payload = (np.asarray([len(raw)], dtype="<u8").tobytes()
+               + raw.astype("<u8").tobytes())
+    urls = []
+    monkeypatch.setattr("urllib.request.urlopen",
+                        _fake_urlopen_for(payload, urls))
+    monkeypatch.setattr(sosd, "_decompress_zstd",
+                        lambda src, dst: shutil.copyfile(src, dst))
+    monkeypatch.setenv("REPRO_SOSD_URL", "https://mirror.example/sosd/")
+    sosd.fetch_real("osm", str(tmp_path))
+    assert urls[0].startswith("https://mirror.example/sosd/")
+
+
+def test_generate_fetch_is_env_gated(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SOSD_DIR", str(tmp_path))   # empty dir
+    monkeypatch.delenv("REPRO_SOSD_FETCH", raising=False)
+    monkeypatch.setattr(sosd, "fetch_real",
+                        lambda *a, **k: pytest.fail("fetched without opt-in"))
+    with pytest.warns(UserWarning, match="surrogate"):
+        got = sosd.generate("face", 4_000, seed=2)        # CI path: no net
+    np.testing.assert_array_equal(got, sosd.gen_face(4_000, seed=2))
+
+
+def test_generate_fetches_when_opted_in(tmp_path, monkeypatch):
+    raw = np.arange(1, 5_001, dtype=np.uint64) * 7
+
+    def fake_fetch(name, dest_dir, **k):
+        path = os.path.join(dest_dir, sosd.SOSD_SOURCES[name])
+        _write_sosd_binary(path, raw)
+        return path
+
+    monkeypatch.setenv("REPRO_SOSD_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_SOSD_FETCH", "1")
+    monkeypatch.setattr(sosd, "fetch_real", fake_fetch)
+    got = sosd.generate("amzn", 2_000, seed=3)
+    assert np.isin(got, raw).all()                        # real keys served
+
+
+def test_generate_fetch_failure_falls_back(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SOSD_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_SOSD_FETCH", "1")
+
+    def failing_fetch(*a, **k):
+        raise OSError("network unreachable")
+
+    monkeypatch.setattr(sosd, "fetch_real", failing_fetch)
+    with pytest.warns(UserWarning, match="fetch .* failed"):
+        got = sosd.generate("wiki", 3_000, seed=4)
+    np.testing.assert_array_equal(got, sosd.gen_wiki(3_000, seed=4))
+
+
+def test_decompress_zstd_without_backend_raises(tmp_path, monkeypatch):
+    monkeypatch.setitem(sys.modules, "zstandard", None)   # import -> ImportError
+    monkeypatch.setattr(sosd.shutil, "which", lambda _: None)
+    src = tmp_path / "x.zst"
+    src.write_bytes(b"\x28\xb5\x2f\xfd")
+    with pytest.raises(RuntimeError, match="no zstd decompressor"):
+        sosd._decompress_zstd(str(src), str(tmp_path / "x"))

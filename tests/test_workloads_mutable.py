@@ -1,0 +1,415 @@
+"""Workload generator + mutable-index tests (DESIGN.md §10).
+
+The centerpiece is the mutable-index INVARIANT: for every LB-capable
+index type x dataset, an interleaved insert/read/compact trace returns
+positions identical to a plain sorted-array `lower_bound_oracle` replay
+at every step — including across hot-swap compactions with in-flight
+batches on the service path.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import base
+from repro.data import sosd
+from repro import workloads
+from repro.workloads import (MIXES, OP_INSERT, OP_RANGE, OP_READ, Workload,
+                             make_point_queries, make_workload, oracle_replay,
+                             replay_on_service)
+from repro.mutable import (LB_INDEXES, DeltaBuffer, MutableIndex, UINT64_MAX)
+from repro.serve.lookup import (MutableLookupService,
+                                MutableLookupServiceConfig)
+
+
+# ---------------------------------------------------------------------------
+# workload generator: determinism, trace format, mixes, distributions
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def wl_keys():
+    return sosd.generate("amzn", 20_000, seed=1)
+
+
+def test_workload_seed_determinism(wl_keys):
+    a = make_workload(wl_keys, 800, mix="ycsb_b", dist="zipfian", seed=4)
+    b = make_workload(wl_keys, 800, mix="ycsb_b", dist="zipfian", seed=4)
+    c = make_workload(wl_keys, 800, mix="ycsb_b", dist="zipfian", seed=5)
+    np.testing.assert_array_equal(a.ops, b.ops)
+    np.testing.assert_array_equal(a.keys, b.keys)
+    np.testing.assert_array_equal(a.aux, b.aux)
+    assert not np.array_equal(a.keys, c.keys)
+
+
+def test_workload_trace_roundtrip(tmp_path, wl_keys):
+    wl = make_workload(wl_keys, 300, mix="ycsb_e", dist="sequential", seed=9)
+    path = str(tmp_path / "trace.npz")
+    wl.save(path)
+    back = Workload.load(path)
+    np.testing.assert_array_equal(wl.ops, back.ops)
+    np.testing.assert_array_equal(wl.keys, back.keys)
+    np.testing.assert_array_equal(wl.aux, back.aux)
+    assert back.meta["mix"] == "ycsb_e" and back.meta["seed"] == 9
+
+
+def test_workload_mix_fractions_and_aux(wl_keys):
+    wl = make_workload(wl_keys, 4_000, mix="ycsb_a", dist="uniform", seed=2)
+    counts = wl.counts()
+    assert counts["range"] == 0
+    assert abs(counts["insert"] / wl.n_ops - 0.5) < 0.05
+    wle = make_workload(wl_keys, 4_000, mix="ycsb_e", dist="uniform", seed=2,
+                        range_len=32)
+    assert wle.counts()["read"] == 0
+    assert (wle.aux[wle.ops == OP_RANGE] == 32).all()
+    assert (wle.aux[wle.ops != OP_RANGE] == 0).all()
+    with pytest.raises(ValueError):
+        make_workload(wl_keys, 10, mix={"read": 0.0})
+    # custom dict mixes normalize
+    wlc = make_workload(wl_keys, 2_000, mix={"read": 3, "insert": 1}, seed=3)
+    assert abs(wlc.counts()["insert"] / 2_000 - 0.25) < 0.05
+
+
+def test_zipfian_skew_exceeds_uniform(wl_keys):
+    rng_z = np.random.default_rng(0)
+    rng_u = np.random.default_rng(0)
+    n = len(wl_keys)
+    z = workloads.zipfian_ranks(rng_z, 20_000, n)
+    u = workloads.uniform_ranks(rng_u, 20_000, n)
+    top_z = np.bincount(z, minlength=n).max()
+    top_u = np.bincount(u, minlength=n).max()
+    assert top_z > 10 * top_u          # theta=0.99 is heavily skewed
+    assert z.min() >= 0 and z.max() < n
+
+
+def test_hot_set_concentration():
+    rng = np.random.default_rng(3)
+    r = workloads.hot_set_ranks(rng, 30_000, 10_000,
+                                hot_frac=0.01, hot_weight=0.9)
+    freq = np.bincount(r, minlength=10_000)
+    hot_mass = np.sort(freq)[::-1][:100].sum() / 30_000
+    assert 0.8 < hot_mass <= 1.0       # ~90% of accesses on 1% of keys
+
+
+def test_sequential_ranks_wrap():
+    rng = np.random.default_rng(1)
+    r = workloads.sequential_ranks(rng, 500, 100, stride=3)
+    assert ((np.diff(r) - 3) % 100 == 0).all()
+    assert r.max() < 100
+
+
+def test_present_absent_fractions(wl_keys):
+    wl = make_workload(wl_keys, 5_000, mix="read_only", dist="uniform",
+                       seed=6, present_frac=0.5)
+    present = np.isin(wl.keys, wl_keys).mean()
+    assert 0.4 < present < 0.6
+
+
+def test_make_queries_bitstream_unchanged(wl_keys):
+    """`sosd.make_queries` now delegates to repro.workloads; the uniform
+    stream must be bit-identical to the historical in-line sampler."""
+    m, seed, frac = 3_000, 11, 0.8
+    rng = np.random.default_rng(seed + 1)         # the legacy algorithm
+    n_present = int(m * frac)
+    present = wl_keys[rng.integers(0, len(wl_keys), n_present)]
+    lo, hi = int(wl_keys[0]), int(wl_keys[-1])
+    absent = rng.integers(max(lo - 1000, 0), hi + 1000, size=m - n_present,
+                          dtype=np.uint64)
+    legacy = np.concatenate([present, absent])
+    rng.shuffle(legacy)
+    legacy = legacy.astype(np.uint64)
+
+    np.testing.assert_array_equal(
+        sosd.make_queries(wl_keys, m, seed=seed, present_frac=frac), legacy)
+    np.testing.assert_array_equal(
+        make_point_queries(wl_keys, m, seed=seed + 1, present_frac=frac),
+        legacy)
+
+
+def test_oracle_replay_read_only_matches_searchsorted(wl_keys):
+    wl = make_workload(wl_keys, 400, mix="read_only", dist="hot_set", seed=8)
+    out = oracle_replay(wl_keys, wl)
+    np.testing.assert_array_equal(out, np.searchsorted(wl_keys, wl.keys))
+
+
+# ---------------------------------------------------------------------------
+# delta buffer
+# ---------------------------------------------------------------------------
+def test_delta_buffer_dedup_and_merge():
+    base_np = np.array([10, 20, 30], np.uint64)
+    d = DeltaBuffer.empty()
+    assert d.count == 0 and int(d.device.shape[0]) == 128
+    d, adm = d.with_inserted(base_np, np.array([20, 5, 5, 40], np.uint64))
+    np.testing.assert_array_equal(adm, [0, 1, 0, 1])   # in-base, fresh, dup, fresh
+    np.testing.assert_array_equal(d.keys_np, [5, 40])
+    d2, adm2 = d.with_inserted(base_np, np.array([5], np.uint64))
+    np.testing.assert_array_equal(adm2, [0])           # already in delta
+    assert d2 is d                                     # no-op reuses snapshot
+
+    snap = d
+    d3, _ = d.with_inserted(base_np, np.array([25], np.uint64))
+    left = d3.minus(snap)
+    np.testing.assert_array_equal(left.keys_np, [25])  # mid-rebuild inserts kept
+
+
+def test_delta_buffer_pad_growth_and_sentinel():
+    base_np = np.array([1], np.uint64)
+    d = DeltaBuffer.empty()
+    d, adm = d.with_inserted(base_np, np.arange(2, 202, dtype=np.uint64))
+    assert adm.sum() == 200 and d.count == 200
+    assert int(d.device.shape[0]) == 256               # next pow2 bucket
+    dev = np.asarray(d.device)
+    assert (dev[200:] == UINT64_MAX).all()
+    assert (np.diff(dev[:200].astype(np.float64)) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# the mutable-index invariant: every LB index type x dataset
+# ---------------------------------------------------------------------------
+def _step_checked_replay(mi, keys, wl, compact_at=()):
+    """Apply the trace op by op; after EVERY op the result must equal the
+    naive sorted-array replay.  `compact_at` forces hot-swap compactions
+    at those op indices — results must be unaffected."""
+    arr = np.asarray(keys, np.uint64).copy()
+    for i in range(wl.n_ops):
+        k = np.array([wl.keys[i]], np.uint64)
+        if wl.ops[i] == OP_INSERT:
+            admitted = int(mi.insert(k)[0])
+            p = int(np.searchsorted(arr, k[0], side="left"))
+            fresh = not (p < arr.size and arr[p] == k[0])
+            assert admitted == int(fresh), f"op {i}: admit flag"
+            if fresh:
+                arr = np.insert(arr, p, k[0])
+        else:
+            pos = int(mi.lookup(k)[0])
+            exp = int(np.searchsorted(arr, k[0], side="left"))
+            assert pos == exp, (f"op {i} ({wl.meta}): merged LB {pos} != "
+                                f"oracle {exp} (delta={mi.delta_count})")
+        if i in compact_at:
+            mi.compact()
+    return arr
+
+
+@pytest.mark.parametrize("index", LB_INDEXES)
+@pytest.mark.parametrize("dataset", sorted(sosd.DATASETS))
+def test_mutable_invariant_every_index_and_dataset(index, dataset):
+    keys = sosd.generate(dataset, 2_500, seed=5)
+    hyper = {"rmi": dict(branching=128), "pgm": dict(eps=32),
+             "radix_spline": dict(eps=16, radix_bits=10)}.get(index, {})
+    mi = MutableIndex(keys, index=index, hyper=hyper,
+                      compact_threshold=1 << 30)   # compactions forced below
+    wl = make_workload(keys, 120, mix="ycsb_a", dist="zipfian", seed=17,
+                       present_frac=0.8)
+    final = _step_checked_replay(mi, keys, wl, compact_at={40, 90})
+    # after the trace the merged view IS the oracle array
+    assert mi.view().n_keys == final.size
+    gen = mi.compact()
+    assert gen is not None and mi.delta_count == 0
+    np.testing.assert_array_equal(mi.view().base_np, final)
+
+
+def test_mutable_index_uint64_max_key():
+    keys = np.arange(10, 5_010, dtype=np.uint64)
+    mi = MutableIndex(keys, index="rmi", hyper=dict(branching=64),
+                      compact_threshold=1 << 30)
+    top = np.array([UINT64_MAX], np.uint64)
+    assert mi.insert(top)[0] == 1
+    assert int(mi.lookup(top)[0]) == len(keys)     # LB of the new last key
+    assert mi.insert(top)[0] == 0                  # sentinel-valued, still deduped
+    mi.compact()
+    assert mi.view().base_np[-1] == UINT64_MAX
+    assert int(mi.lookup(top)[0]) == len(keys)
+
+
+def test_compaction_preserves_inserts_admitted_mid_rebuild():
+    """Keys admitted while a compaction is rebuilding must survive the
+    publish (the leftover-delta diff) — pinned with a slow builder."""
+    keys = sosd.generate("wiki", 4_000, seed=3)
+    mi = MutableIndex(keys, index="rmi", hyper=dict(branching=128),
+                      compact_threshold=1 << 30)
+    gap = int(np.flatnonzero(np.diff(keys) > 2)[0])  # room for two new keys
+    first = np.array([keys[gap] + 1], np.uint64)
+    assert mi.insert(first)[0] == 1
+
+    in_build, release = threading.Event(), threading.Event()
+    real_build = base.REGISTRY["rmi"]
+
+    @base.register("_test_slow_rmi2")
+    def slow_build(k, **h):                        # noqa: ANN001
+        in_build.set()
+        assert release.wait(10.0)
+        return real_build(k, **h)
+
+    try:
+        mi.index = "_test_slow_rmi2"
+        t = threading.Thread(target=mi.compact)
+        t.start()
+        assert in_build.wait(10.0)
+        late = np.array([keys[gap] + 2], np.uint64)  # admitted mid-rebuild
+        assert mi.insert(late)[0] == 1
+        release.set()
+        t.join(timeout=30.0)
+    finally:
+        release.set()
+        base.REGISTRY.pop("_test_slow_rmi2", None)
+        mi.index = "rmi"
+    assert mi.delta_count == 1                     # late key survived
+    np.testing.assert_array_equal(mi.view().delta.keys_np, late)
+    assert first[0] in mi.view().base_np           # snapshot key folded in
+    q = np.sort(np.concatenate([first, late]))
+    merged = np.sort(np.concatenate([keys, q]))
+    np.testing.assert_array_equal(mi.lookup(q),
+                                  np.searchsorted(merged, q))
+
+
+def test_reset_during_compaction_discards_stale_rebuild():
+    """A reset() landing mid-rebuild must win: the finished compaction
+    detects its snapshot is stale and drops the rebuilt generation
+    instead of resurrecting the discarded key set."""
+    old_keys = sosd.generate("amzn", 3_000, seed=1)
+    new_keys = sosd.generate("osm", 2_000, seed=2)
+    mi = MutableIndex(old_keys, index="rmi", hyper=dict(branching=128),
+                      compact_threshold=1 << 30)
+    mi.insert(np.array([old_keys[0] + 1], np.uint64))
+
+    in_build, release = threading.Event(), threading.Event()
+    real_build = base.REGISTRY["rmi"]
+
+    @base.register("_test_slow_rmi3")
+    def slow_build(k, **h):                        # noqa: ANN001
+        in_build.set()
+        assert release.wait(10.0)
+        return real_build(k, **h)
+
+    results = []
+    try:
+        mi.index = "_test_slow_rmi3"
+        t = threading.Thread(target=lambda: results.append(mi.compact()))
+        t.start()
+        assert in_build.wait(10.0)
+        mi.index = "rmi"
+        mi.reset(new_keys)                         # whole-key-set swap
+        release.set()
+        t.join(timeout=30.0)
+    finally:
+        release.set()
+        base.REGISTRY.pop("_test_slow_rmi3", None)
+    assert results == [None]                       # rebuild was abandoned
+    np.testing.assert_array_equal(mi.view().base_np, new_keys)
+    assert mi.delta_count == 0
+    q = new_keys[::97]
+    np.testing.assert_array_equal(mi.lookup(q),
+                                  np.searchsorted(new_keys, q))
+
+
+def test_workload_generation_over_uint64_max_keys():
+    """Key sets containing UINT64_MAX (legal after a compaction folds a
+    max-key insert) must not overflow the absent-draw bounds."""
+    keys = np.concatenate([np.arange(10, 2_010, dtype=np.uint64),
+                           np.array([UINT64_MAX], np.uint64)])
+    wl = make_workload(keys, 400, mix="ycsb_a", dist="uniform", seed=1,
+                       present_frac=0.5)
+    assert wl.n_ops == 400
+    q = make_point_queries(keys, 300, seed=2, present_frac=0.5)
+    assert q.size == 300 and q.dtype == np.uint64
+
+
+# ---------------------------------------------------------------------------
+# mutable SERVICE: admission-order semantics, in-flight hot swaps
+# ---------------------------------------------------------------------------
+def test_service_failing_compaction_is_observable():
+    keys = sosd.generate("amzn", 4_000, seed=9)
+    svc = MutableLookupService(keys, MutableLookupServiceConfig(
+        index="rmi", hyper=dict(branching=128), compact_threshold=8,
+        auto_compact=True))
+    boom = RuntimeError("rebuild exploded")
+
+    def failing_compact():
+        raise boom
+
+    svc.mindex.compact = failing_compact
+    svc.insert(np.arange(1, 33, dtype=np.uint64) * 2 + keys[0])
+    svc.drain()                                    # insert run spawns compactor
+    t = svc._compact_thread
+    assert t is not None
+    t.join(timeout=10.0)
+    assert svc.metrics.snapshot()["compaction_failures"] >= 1
+    assert svc.last_compaction_error is boom
+    # backoff: the next insert run must NOT respawn immediately
+    svc.insert(np.arange(1, 9, dtype=np.uint64) * 3 + keys[0])
+    svc.drain()
+    assert svc._compact_thread is t                # spawn was skipped
+    with pytest.raises(RuntimeError, match="rebuild exploded"):
+        svc.force_compact()                        # sync path surfaces it
+    assert svc.metrics.snapshot()["compaction_failures"] >= 2
+    svc.stop()
+def test_service_inflight_batches_across_forced_compaction():
+    keys = sosd.generate("osm", 6_000, seed=4)
+    svc = MutableLookupService(keys, MutableLookupServiceConfig(
+        index="pgm", hyper=dict(eps=32), max_batch=256, deadline_ms=60_000.0,
+        compact_threshold=1 << 30, auto_compact=False))
+    wl = make_workload(keys, 500, mix="ycsb_a", dist="hot_set", seed=21,
+                       present_frac=0.85)
+    # phase 1: put keys in the delta so the forced compaction has work
+    head, tail = 200, 500
+    futs = []
+    i = 0
+    while i < head:
+        j = min(i + 37, head)
+        op = wl.ops[i]
+        j = next((k for k in range(i, j) if wl.ops[k] != op), j)
+        ks = wl.keys[i:j]
+        futs.append(svc.insert(ks) if op == OP_INSERT else svc.submit(ks))
+        i = j
+    svc.drain()
+    assert svc.mindex.delta_count > 0
+    # phase 2: admit the rest WITHOUT draining, hot-swap-compact with the
+    # batches in flight, then drain — results must match admission order
+    while i < tail:
+        j = i
+        while j < tail and wl.ops[j] == wl.ops[i] and j - i < 41:
+            j += 1
+        ks = wl.keys[i:j]
+        futs.append(svc.insert(ks) if wl.ops[i] == OP_INSERT
+                    else svc.submit(ks))
+        i = j
+    assert svc.batcher.pending_requests > 0        # genuinely in flight
+    gen = svc.force_compact()
+    assert gen is not None
+    svc.drain()
+    got = np.concatenate([f.result(30.0) for f in futs])
+    expected = oracle_replay(keys, Workload(ops=wl.ops[:tail],
+                                            keys=wl.keys[:tail],
+                                            aux=wl.aux[:tail]))
+    np.testing.assert_array_equal(got, expected)
+    assert svc.metrics.snapshot()["compactions"] >= 1
+    svc.stop()
+
+
+def test_service_auto_compaction_under_background_flusher():
+    keys = sosd.generate("face", 8_000, seed=6)
+    svc = MutableLookupService(keys, MutableLookupServiceConfig(
+        index="rmi", hyper=dict(branching=256), max_batch=128,
+        deadline_ms=1.0, compact_threshold=60))
+    wl = make_workload(keys, 700, mix="ycsb_a", dist="zipfian", seed=23,
+                       present_frac=0.9)
+    with svc:
+        got = replay_on_service(wl, svc, chunk=32)
+    np.testing.assert_array_equal(got, oracle_replay(keys, wl))
+    snap = svc.metrics.snapshot()
+    assert snap["compactions"] >= 1                # threshold fired
+    assert snap["insert_batches"] >= 1
+    assert snap["admitted"] == int(got[wl.ops == OP_INSERT].sum())
+    assert svc.generation.version >= 1             # hot-swapped >= once
+
+
+def test_service_range_blend_and_delta_gauge():
+    keys = sosd.generate("amzn", 5_000, seed=8)
+    svc = MutableLookupService(keys, MutableLookupServiceConfig(
+        index="radix_spline", hyper=dict(eps=16, radix_bits=10),
+        max_batch=256, deadline_ms=1.0, compact_threshold=1 << 30))
+    wl = make_workload(keys, 300, mix="ycsb_e", dist="sequential", seed=2)
+    got = replay_on_service(wl, svc, chunk=64)     # sync mode: drained inline
+    np.testing.assert_array_equal(got, oracle_replay(keys, wl))
+    snap = svc.metrics.snapshot()
+    assert snap["delta_keys"] == svc.mindex.delta_count > 0
+    assert 0.0 <= snap["delta_occupancy"] < 1e-3   # huge threshold
+    svc.stop()

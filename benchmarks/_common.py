@@ -16,6 +16,9 @@ import numpy as np
 N_KEYS = int(os.environ.get("SOSD_N", 400_000))
 N_QUERIES = int(os.environ.get("SOSD_Q", 100_000))
 REPEATS = int(os.environ.get("SOSD_REPEATS", 3))
+#: Lookup-plan backend axis ("jnp" | "pallas") — every lookup benchmark
+#: accepts --backend / SOSD_BACKEND and threads it through the plan IR.
+BACKEND = os.environ.get("SOSD_BACKEND", "jnp")
 
 
 @functools.lru_cache(maxsize=None)
@@ -47,12 +50,28 @@ def time_lookup(fn: Callable, *args, repeats: int = REPEATS) -> float:
     return best
 
 
-def full_lookup_fn(build, data_jnp, last_mile: str = "binary"):
-    """jit'd end-to-end lookup: index bounds + last-mile search
-    (canonical implementation lives in repro.core.search)."""
-    from repro.core import search
+def full_lookup_fn(build, data_jnp, last_mile: str = "binary",
+                   backend=None):
+    """jit'd end-to-end lookup: lower the build to its `LookupPlan`
+    (repro.core.plan) and compile for the requested backend (default:
+    the --backend / SOSD_BACKEND axis)."""
+    from repro.core import plan
 
-    return search.fused_lookup_fn(build, data_jnp, last_mile=last_mile)
+    return plan.lower(build, data_jnp, last_mile=last_mile).compile(
+        backend=backend or BACKEND)
+
+
+def backend_arg(argv=None):
+    """Parse --backend from argv (benchmark __main__s); also updates the
+    module-level default so nested helpers pick it up."""
+    import argparse
+
+    global BACKEND
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default=BACKEND)
+    ns, _ = ap.parse_known_args(argv)
+    BACKEND = ns.backend
+    return ns.backend
 
 
 def emit(rows, header=None, path=None):

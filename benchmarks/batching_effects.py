@@ -18,7 +18,7 @@ import numpy as np
 from benchmarks import _common as C
 
 
-def run(ds="amzn", out_dir="benchmarks/results"):
+def run(ds="amzn", out_dir="benchmarks/results", backend=None):
     import jax
     import jax.numpy as jnp
     from repro.core import base
@@ -33,7 +33,7 @@ def run(ds="amzn", out_dir="benchmarks/results"):
                         ("btree", dict(sample=8)),
                         ("rbs", dict(radix_bits=16))]:
         b = base.REGISTRY[name](keys, **hyper)
-        fn = C.full_lookup_fn(b, data_jnp)
+        fn = C.full_lookup_fn(b, data_jnp, backend=backend)
         q_jnp = jnp.asarray(q)
         fused = C.time_lookup(fn, q_jnp)
         # "fenced": 64 sub-batches, each synchronized before the next
@@ -56,4 +56,4 @@ def run(ds="amzn", out_dir="benchmarks/results"):
 
 
 if __name__ == "__main__":
-    run()
+    run(backend=C.backend_arg())

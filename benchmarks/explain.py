@@ -15,7 +15,8 @@ import numpy as np
 from benchmarks import _common as C
 
 
-def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results"):
+def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results",
+        backend=None):
     import jax.numpy as jnp
     from repro.core import analysis, base, tuning
 
@@ -30,7 +31,7 @@ def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results"):
                                   max_configs=5):
             lo, hi = build.lookup(build.state, q_jnp)
             widths = np.maximum(np.asarray(hi) - np.asarray(lo) + 1, 1)
-            fn = C.full_lookup_fn(build, data_jnp)
+            fn = C.full_lookup_fn(build, data_jnp, backend=backend)
             secs = C.time_lookup(fn, q_jnp)
             rec = analysis.describe(build, widths)
             rec["dataset"] = ds
@@ -61,4 +62,4 @@ def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results"):
 
 
 if __name__ == "__main__":
-    run()
+    run(backend=C.backend_arg())

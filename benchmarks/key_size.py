@@ -19,7 +19,7 @@ def _to_32bit(keys: np.ndarray) -> np.ndarray:
     return np.unique(scaled)
 
 
-def run(ds="amzn", out_dir="benchmarks/results"):
+def run(ds="amzn", out_dir="benchmarks/results", backend=None):
     import jax.numpy as jnp
     from repro.core import base
     from repro.data import sosd
@@ -36,7 +36,7 @@ def run(ds="amzn", out_dir="benchmarks/results"):
                             ("radix_spline", dict(eps=32, radix_bits=16)),
                             ("btree", dict(sample=8))]:
             b = base.REGISTRY[name](keys, **hyper)
-            fn = C.full_lookup_fn(b, data_jnp)
+            fn = C.full_lookup_fn(b, data_jnp, backend=backend)
             secs = C.time_lookup(fn, q_jnp)
             rows.append([width, name, b.size_bytes,
                          round(C.ns_per_lookup(secs, len(q)), 2), "f64-core"])
@@ -58,4 +58,4 @@ def run(ds="amzn", out_dir="benchmarks/results"):
 
 
 if __name__ == "__main__":
-    run()
+    run(backend=C.backend_arg())

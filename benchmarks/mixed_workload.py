@@ -54,7 +54,7 @@ N_OPS = int(os.environ.get("MIXED_OPS", 6_000))
 
 
 def _run_cell(ds: str, index: str, mix: str, dist: str, n_ops: int,
-              n_keys: int):
+              n_keys: int, backend: str = "jnp"):
     from repro import workloads
     from repro.serve.lookup import (DEFAULT_HYPER, MutableLookupService,
                                     MutableLookupServiceConfig)
@@ -68,17 +68,25 @@ def _run_cell(ds: str, index: str, mix: str, dist: str, n_ops: int,
 
     t0 = time.perf_counter()
     svc = MutableLookupService(keys, MutableLookupServiceConfig(
-        index=index, hyper=DEFAULT_HYPER.get(index, {}),
+        index=index, hyper=DEFAULT_HYPER.get(index, {}), backend=backend,
         max_batch=1024, deadline_ms=2.0, compact_threshold=threshold))
     build_s = time.perf_counter() - t0
 
+    # scan-carrying mixes (YCSB-E) execute ranges END-TO-END as op kind
+    # "scan": each range materializes its window through the plan's
+    # windowed gather and is verified against the numpy scan oracle.
+    has_ranges = wl.counts()["range"] > 0
     t0 = time.perf_counter()
     with svc:                       # background flusher + auto compaction
-        got = workloads.replay_on_service(wl, svc, chunk=128)
+        res = workloads.replay_on_service(wl, svc, chunk=128,
+                                          scan_ranges=has_ranges)
     replay_s = time.perf_counter() - t0
 
-    expected = workloads.oracle_replay(keys, wl)
-    verified = bool(np.array_equal(got, expected))
+    got, windows = res if has_ranges else (res, {})
+    expected, exp_windows = workloads.oracle_scan_replay(
+        keys, wl, scan_windows=has_ranges)
+    verified = bool(np.array_equal(got, expected)) and all(
+        np.array_equal(windows[i], exp_windows[i]) for i in exp_windows)
     snap = svc.metrics.snapshot()
     return {
         "dataset": ds,
@@ -96,18 +104,22 @@ def _run_cell(ds: str, index: str, mix: str, dist: str, n_ops: int,
         "ops_per_s": round(wl.n_ops / replay_s, 1),
         "mean_batch_ms": round(snap["mean_batch_ms"], 4),
         "mean_insert_ms": round(snap["mean_insert_ms"], 4),
+        "n_scan_windows": len(windows),
+        "backend": backend,
         "verified_vs_oracle": verified,
     }
 
 
 def run(out_dir: str = "benchmarks/results", n_ops: int = N_OPS,
         n_keys: int = C.N_KEYS, datasets=None, indexes=None,
-        mix_points=None):
+        mix_points=None, backend=None):
+    backend = backend or C.BACKEND
     rows = []
     for ds in (datasets or DATASETS):
         for index in (indexes or INDEX_NAMES):
             for mix, dist in (mix_points or MIX_POINTS):
-                r = _run_cell(ds, index, mix, dist, n_ops, n_keys)
+                r = _run_cell(ds, index, mix, dist, n_ops, n_keys,
+                              backend=backend)
                 rows.append(r)
                 print(f"{ds:5s} {index:12s} {mix:7s} {dist:10s} "
                       f"{r['ops_per_s']/1e3:8.1f} kops/s  "
@@ -125,17 +137,18 @@ def run(out_dir: str = "benchmarks/results", n_ops: int = N_OPS,
     return rows
 
 
-def smoke():
+def smoke(backend=None):
     """CI cell: insert-heavy zipfian trace on one index, threshold low
     enough to force at least one compaction; fails on any unverified op
     or on a run that never compacted."""
     rows = run(n_ops=min(N_OPS, 2_000), n_keys=min(C.N_KEYS, 20_000),
                datasets=["amzn"], indexes=["rmi"],
-               mix_points=[("ycsb_a", "zipfian")])
+               mix_points=[("ycsb_a", "zipfian")], backend=backend)
     if rows[0]["compactions"] < 1:
         raise SystemExit("smoke cell performed no compaction")
     return rows
 
 
 if __name__ == "__main__":
-    smoke() if "--smoke" in sys.argv[1:] else run()
+    _backend = C.backend_arg()
+    smoke(_backend) if "--smoke" in sys.argv[1:] else run(backend=_backend)

@@ -28,7 +28,7 @@ def _shard_queries(q, mesh):
     return jax.device_put(q, SH.act_sharding(q.shape, ("batch",), mesh))
 
 
-def run(ds="amzn", out_dir="benchmarks/results"):
+def run(ds="amzn", out_dir="benchmarks/results", backend=None):
     import numpy as np
     import jax.numpy as jnp
     from repro.core import analysis, base
@@ -43,7 +43,7 @@ def run(ds="amzn", out_dir="benchmarks/results"):
                         ("radix_spline", dict(eps=32, radix_bits=16)),
                         ("rbs", dict(radix_bits=16))]:
         b = base.REGISTRY[name](keys, **hyper)
-        fn = C.full_lookup_fn(b, data_jnp)
+        fn = C.full_lookup_fn(b, data_jnp, backend=backend)
         for m in (1_000, 10_000, 100_000):
             qm = jnp.asarray(q[:m])
             secs = C.time_lookup(fn, qm)
@@ -55,7 +55,7 @@ def run(ds="amzn", out_dir="benchmarks/results"):
                          ("btree", [dict(sample=s) for s in (64, 8, 1)])]:
         for hyper in ladder:
             b = base.REGISTRY[name](keys, **hyper)
-            fn = C.full_lookup_fn(b, data_jnp)
+            fn = C.full_lookup_fn(b, data_jnp, backend=backend)
             qm = jnp.asarray(q)
             secs = C.time_lookup(fn, qm)
             lo, hi = b.lookup(b.state, qm)
@@ -72,7 +72,7 @@ def run(ds="amzn", out_dir="benchmarks/results"):
     mesh = jax.make_mesh((n_dev,), ("data",))
     for name, hyper in [("rmi", dict(branching=4096)), ("pgm", dict(eps=64))]:
         b = base.REGISTRY[name](keys, **hyper)
-        fn = C.full_lookup_fn(b, data_jnp)
+        fn = C.full_lookup_fn(b, data_jnp, backend=backend)
         m = (len(q) // n_dev) * n_dev
         qm = _shard_queries(jnp.asarray(q[:m]), mesh)
         secs = C.time_lookup(fn, qm)
@@ -85,4 +85,4 @@ def run(ds="amzn", out_dir="benchmarks/results"):
 
 
 if __name__ == "__main__":
-    run()
+    run(backend=C.backend_arg())

@@ -15,7 +15,8 @@ import numpy as np
 from benchmarks import _common as C
 
 
-def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results"):
+def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results",
+        backend=None):
     import jax.numpy as jnp
     from repro.core import base, tuning
 
@@ -28,7 +29,7 @@ def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results"):
         lb = np.searchsorted(keys, q)
         for build in tuning.sweep(keys, names=("rmi", "pgm", "radix_spline",
                                                "btree", "rbs", "binary_search")):
-            fn = C.full_lookup_fn(build, data_jnp)
+            fn = C.full_lookup_fn(build, data_jnp, backend=backend)
             secs = C.time_lookup(fn, q_jnp)
             got = np.asarray(fn(q_jnp))
             exact = bool((got == lb).all())
@@ -64,5 +65,5 @@ def pareto_summary(rows):
 
 
 if __name__ == "__main__":
-    rows = run()
+    rows = run(backend=C.backend_arg())
     print("\npareto frontier families:", pareto_summary(rows))

@@ -23,11 +23,23 @@ os.environ.setdefault("SOSD_Q", "50000")
 
 
 def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("jnp", "pallas"),
+                    default=os.environ.get("SOSD_BACKEND", "jnp"),
+                    help="LookupPlan backend for every lookup benchmark "
+                         "(pallas = kernel path, interpret mode on CPU)")
+    args = ap.parse_args()
+    # _common reads the env at import; set it before the imports below
+    os.environ["SOSD_BACKEND"] = args.backend
+
     from benchmarks import (batching_effects, build_times, explain, key_size,
                             mixed_workload, moe_dispatch, pareto,
                             parallel_scaling, scaling, search_fn,
                             serve_throughput)
 
+    print(f"# backend={args.backend}")
     print("name,us_per_call,derived")
     jobs = [
         ("pareto_fig7", pareto.run, lambda rows: pareto.pareto_summary(rows)),

@@ -9,7 +9,7 @@ from benchmarks import _common as C
 
 
 def run(sizes=(100_000, 200_000, 400_000, 800_000), ds="amzn",
-        out_dir="benchmarks/results"):
+        out_dir="benchmarks/results", backend=None):
     import jax.numpy as jnp
     from repro.core import base
     from repro.data import sosd
@@ -26,7 +26,7 @@ def run(sizes=(100_000, 200_000, 400_000, 800_000), ds="amzn",
         data_jnp, q_jnp = jnp.asarray(keys), jnp.asarray(q)
         for name, hyper in configs:
             b = base.REGISTRY[name](keys, **hyper)
-            fn = C.full_lookup_fn(b, data_jnp)
+            fn = C.full_lookup_fn(b, data_jnp, backend=backend)
             secs = C.time_lookup(fn, q_jnp)
             rows.append([ds, n, name, b.size_bytes,
                          round(C.ns_per_lookup(secs, len(q)), 2)])
@@ -37,4 +37,4 @@ def run(sizes=(100_000, 200_000, 400_000, 800_000), ds="amzn",
 
 
 if __name__ == "__main__":
-    run()
+    run(backend=C.backend_arg())

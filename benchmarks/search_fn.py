@@ -2,37 +2,59 @@
 
 Expectation from the paper: binary beats (vector-)linear at these bound
 widths; interpolation helps on smooth data (amzn), not on osm.
+
+Beyond-paper axis: ``--backend pallas`` runs every cell through the
+plan IR's kernel backend (`kernels/bounded_search`, fused
+`kernels/rmi_lookup` for rmi; interpret mode on CPU) and asserts the LB
+ranks match the jnp backend bit-for-bit — the CI smoke cell that keeps
+kernel lowering from rotting.
 """
 from __future__ import annotations
 
 import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/search_fn.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 from benchmarks import _common as C
 
 
-def run(datasets=("amzn", "osm"), out_dir="benchmarks/results"):
+def run(datasets=("amzn", "osm"), out_dir="benchmarks/results",
+        backend=None):
+    import numpy as np
     import jax.numpy as jnp
     from repro.core import base
 
+    backend = backend or C.BACKEND
     rows = []
     for ds in datasets:
         keys = C.dataset(ds)
         q = C.queries(ds)
         data_jnp, q_jnp = jnp.asarray(keys), jnp.asarray(q)
+        lb = np.searchsorted(keys, q)
         for name, hyper in [("rmi", dict(branching=2048)),
                             ("pgm", dict(eps=128)),
                             ("radix_spline", dict(eps=64, radix_bits=14)),
                             ("rbs", dict(radix_bits=14))]:
             b = base.REGISTRY[name](keys, **hyper)
             for lm in ("binary", "linear", "interpolation"):
-                fn = C.full_lookup_fn(b, data_jnp, last_mile=lm)
+                fn = C.full_lookup_fn(b, data_jnp, last_mile=lm,
+                                      backend=backend)
                 secs = C.time_lookup(fn, q_jnp)
-                rows.append([ds, name, lm,
+                if backend != "jnp":
+                    got = np.asarray(fn(q_jnp))
+                    assert (got == lb).all(), \
+                        f"{backend} backend diverged: {ds}/{name}/{lm}"
+                rows.append([ds, name, lm, backend,
                              round(C.ns_per_lookup(secs, len(q)), 2)])
-    C.emit(rows, header=["dataset", "index", "last_mile", "ns_per_lookup"],
+    C.emit(rows, header=["dataset", "index", "last_mile", "backend",
+                         "ns_per_lookup"],
            path=os.path.join(out_dir, "search_fn.csv"))
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    run(backend=C.backend_arg(sys.argv[1:]))

@@ -51,9 +51,9 @@ DATASETS = ["amzn", "face", "osm", "wiki"]
 N_SERVE_Q = int(os.environ.get("SERVE_Q", min(C.N_QUERIES, 10_000)))
 
 
-def _run_cell(ds: str, index: str, max_batch: int, request_keys: int):
+def _run_cell(ds: str, index: str, max_batch: int, request_keys: int,
+              backend: str = "jnp"):
     import jax.numpy as jnp
-    from repro.core import search
     from repro.serve.lookup import (DEFAULT_HYPER, LookupService,
                                     LookupServiceConfig)
     hyper = DEFAULT_HYPER.get(index, {})
@@ -63,7 +63,8 @@ def _run_cell(ds: str, index: str, max_batch: int, request_keys: int):
 
     t0 = time.perf_counter()
     svc = LookupService(keys, LookupServiceConfig(
-        index=index, hyper=hyper, max_batch=max_batch, deadline_ms=2.0))
+        index=index, hyper=hyper, backend=backend,
+        max_batch=max_batch, deadline_ms=2.0))
     build_s = time.perf_counter() - t0
 
     chunks = [q[i:i + request_keys] for i in range(0, len(q), request_keys)]
@@ -72,9 +73,12 @@ def _run_cell(ds: str, index: str, max_batch: int, request_keys: int):
         outs = [f.result(timeout=120.0) for f in futs]
     got = np.concatenate(outs)
 
+    # verify against a direct single-device plan lookup on the JNP
+    # backend — cross-backend when the service runs pallas, and reusing
+    # the generation's own plan (per-plan compile cache, no re-lowering)
     direct = np.asarray(
-        search.fused_lookup_fn(svc.generation.build, jnp.asarray(keys))(
-            jnp.asarray(q)), dtype=np.int64)
+        svc.generation.plan.compile(backend="jnp")(jnp.asarray(q)),
+        dtype=np.int64)
     verified = bool(np.array_equal(got, direct))
 
     snap = svc.metrics.snapshot()
@@ -82,6 +86,7 @@ def _run_cell(ds: str, index: str, max_batch: int, request_keys: int):
         "dataset": ds,
         "index": index,
         "max_batch": max_batch,
+        "backend": backend,
         "request_keys": request_keys,
         "n_keys": int(len(keys)),
         "n_queries": int(len(q)),
@@ -96,12 +101,14 @@ def _run_cell(ds: str, index: str, max_batch: int, request_keys: int):
     }
 
 
-def run(out_dir: str = "benchmarks/results"):
+def run(out_dir: str = "benchmarks/results", backend=None):
+    backend = backend or C.BACKEND
     rows = []
     for ds in DATASETS:
         for index in INDEX_NAMES:
             for max_batch, request_keys in BATCH_POINTS:
-                r = _run_cell(ds, index, max_batch, request_keys)
+                r = _run_cell(ds, index, max_batch, request_keys,
+                              backend=backend)
                 rows.append(r)
                 print(f"{ds:5s} {index:12s} batch={max_batch:5d} "
                       f"{r['lookups_per_s']/1e3:9.1f} klookups/s  "
@@ -120,4 +127,4 @@ def run(out_dir: str = "benchmarks/results"):
 
 
 if __name__ == "__main__":
-    run()
+    run(backend=C.backend_arg())

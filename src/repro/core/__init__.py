@@ -22,11 +22,14 @@ from repro.core.base import (  # noqa: E402
     get_index,
 )
 from repro.core import rmi, radix_spline, pgm, btree, rbs, hashmap  # noqa: E402,F401
-from repro.core import search, validate, tuning, analysis  # noqa: E402,F401
+from repro.core import plan, search, validate, tuning, analysis  # noqa: E402,F401
+from repro.core.plan import LookupPlan, lower  # noqa: E402
 
 __all__ = [
     "IndexBuild",
+    "LookupPlan",
     "SearchBound",
+    "lower",
     "lower_bound_oracle",
     "REGISTRY",
     "register",

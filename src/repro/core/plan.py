@@ -1,0 +1,325 @@
+"""`LookupPlan` IR: one lowering target for every index (DESIGN.md §11).
+
+The paper's central observation (§5) is that every competitive index —
+learned or not — reduces to the same two-phase shape: *predict a
+position, then bounded last-mile search*.  This module makes that shape
+an explicit, inspectable value instead of a per-index closure:
+
+    IndexBuild --lower()--> LookupPlan(bounds, data, last_mile)
+                                |.compile(backend)         -> q -> LB ranks
+                                |.compile_scan(m)          -> q -> (LB, window)
+                                |.compile_merged()         -> (q, delta) -> merged LB
+                                |.compile_merged_scan(m)   -> (q, delta) -> merged (LB, window)
+
+A plan is a `bounds` stage — the index's state pytree, a pure predict
+function ``(state, q) -> (lo, hi)`` with ``hi`` inclusive, and the
+static window bound ``max_err`` (``hi - lo + 1 <= max_err`` with
+``LB in [lo, hi]``) — composed with a last-mile stage executed by a
+pluggable backend:
+
+  ``"jnp"``     the vectorized `repro.core.search.SEARCH_FNS` searches,
+                bit-identical to the historical fused pipeline;
+  ``"pallas"``  the tile-binned `kernels/bounded_search` kernel consuming
+                the plan's bounds (any index), or — where an index
+                registers one — a fused whole-plan kernel executor
+                (`kernels/rmi_lookup` for RMI).  On CPU the kernels run
+                in interpret mode, so both backends execute everywhere.
+
+Both backends return the exact lower-bound rank, so they are
+bit-identical for every plan (pinned by tests/test_plan.py across the
+full index x dataset x last-mile matrix).
+
+Every consumer goes through plans: `core.search.fused_lookup_fn` is a
+thin ``lower(...).compile(...)`` shim, the serving registry publishes
+`Generation`s carrying their plan, the mutable layer's delta rank
+correction and the range-scan materialization are plan transforms
+(`compile_merged*`), and the benchmark matrix selects backends through
+the same seam (`benchmarks/_common.full_lookup_fn`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import base, search
+
+__all__ = ["BACKENDS", "BoundsStage", "LookupPlan", "lower",
+           "register_fused", "FUSED_LOWERERS"]
+
+#: The backend axis every lookup consumer can select on.
+BACKENDS = ("jnp", "pallas")
+
+#: index name -> (plan, interpret) -> fn(q) -> positions.  A fused
+#: executor replaces the whole predict+search pipeline with one kernel
+#: path; registered per index family, used by backend="pallas".
+FUSED_LOWERERS: Dict[str, Callable] = {}
+
+
+def register_fused(name: str):
+    def deco(fn):
+        FUSED_LOWERERS[name] = fn
+        return fn
+
+    return deco
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundsStage:
+    """The predict half of a plan.
+
+    ``predict(state, q) -> (lo, hi)`` must be pure jnp (jit/shard-safe),
+    with ``hi`` inclusive, ``lo <= LB(q) <= hi`` for every uint64 query
+    (the §2 validity contract), and ``hi - lo + 1 <= max_err`` with
+    ``max_err`` static — the error guarantee that fixes last-mile trip
+    counts and kernel window widths.  Point-only indexes (robin_hash)
+    instead return ``(found, pos)`` and set ``max_err = 0``.
+    """
+
+    state: Any
+    predict: Callable[[Any, base.Array], base.SearchBound]
+    max_err: int
+
+
+def _window_gather(data, pos, m: int):
+    """[B] start positions -> [B, m] record window, one static gather.
+
+    Past-the-end lanes hold the dtype's max value (for uint64 keys:
+    UINT64_MAX, the same sentinel the delta buffer pads with) so windows
+    of different plans merge by plain sort.
+    """
+    n = data.shape[0]
+    sentinel = jnp.asarray(jnp.iinfo(data.dtype).max, data.dtype)
+    idx = pos[:, None] + jnp.arange(m, dtype=pos.dtype)[None, :]
+    oob = idx >= n
+    window = jnp.take(data, jnp.clip(idx, 0, n - 1), mode="clip")
+    return jnp.where(oob, sentinel, window)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LookupPlan:
+    """One index lowered to predict -> bounded-search, backend-agnostic."""
+
+    name: str
+    bounds: BoundsStage
+    data: Any                  # jnp device copy of the sorted keys
+    n: int
+    last_mile: str = "binary"
+    point_only: bool = False
+    fused: Optional[Callable] = None   # whole-plan kernel executor factory
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # compiled-fn cache: (kind, backend, interpret, ...) -> jitted callable.
+    # Keyed per plan instance so repeated dispatch (registry generations,
+    # sharded batches) reuses one compiled program per shape bucket.
+    _cache: Dict[Any, Any] = dataclasses.field(
+        default_factory=dict, repr=False)
+
+    # -- expression builders (pure, un-jitted — composable in transforms) --
+    def lb_expr(self, backend: str = "jnp", interpret: bool = False,
+                fused: Optional[bool] = None) -> Callable:
+        """``q -> int64 LB ranks`` as a pure expression.
+
+        ``fused=None`` uses the registered whole-plan kernel when the
+        backend is pallas and the index has one; ``fused=False`` forces
+        the generic bounds->`lower_bound_windows` path (parity tests
+        exercise both).
+        """
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+        if self.point_only:
+            predict, state = self.bounds.predict, self.bounds.state
+
+            def run_point(q):
+                found, pos = predict(state, q)
+                return jnp.where(found, pos, -1).astype(jnp.int64)
+
+            return run_point
+
+        predict, state = self.bounds.predict, self.bounds.state
+        max_err, data = self.bounds.max_err, self.data
+
+        if backend == "pallas":
+            if fused is None:
+                fused = self.fused is not None
+            if fused:
+                if self.fused is None:
+                    raise ValueError(
+                        f"plan {self.name!r} has no fused kernel executor")
+                inner = self.fused(self, interpret)
+                return lambda q: inner(q).astype(jnp.int64)
+
+            from repro.kernels.bounded_search.ops import lower_bound_windows
+
+            def run_pallas(q):
+                lo, _hi = predict(state, q)
+                # window precondition lo <= LB < lo + max_err holds by the
+                # bounds contract (LB <= hi <= lo + max_err - 1)
+                return lower_bound_windows(
+                    data, q, lo, max_width=max_err,
+                    interpret=interpret).astype(jnp.int64)
+
+            return run_pallas
+
+        fn = search.SEARCH_FNS[self.last_mile]
+
+        def run_jnp(q):
+            lo, hi = predict(state, q)
+            return fn(data, q, lo, hi, max_err).astype(jnp.int64)
+
+        return run_jnp
+
+    def merged_expr(self, backend: str = "jnp",
+                    interpret: bool = False) -> Callable:
+        """Delta rank correction as a plan transform (DESIGN.md §10.2):
+        ``(q, delta_padded) -> LB_base(q) + LB_delta(q)``.  Exact because
+        base and delta are disjoint sorted sets; the padded delta's
+        UINT64_MAX sentinels can never be counted by a lower bound."""
+        run = self.lb_expr(backend, interpret)
+
+        def merged(q, delta_padded):
+            lb_base = run(q)
+            lb_delta = jnp.searchsorted(delta_padded, q, side="left")
+            return lb_base + lb_delta.astype(jnp.int64)
+
+        return merged
+
+    def scan_expr(self, m: int, backend: str = "jnp",
+                  interpret: bool = False) -> Callable:
+        """Range-scan materialization: ``q -> (LB, window[B, m])`` — the
+        ``m`` records from ``LB(q)`` as one static-width windowed gather."""
+        if self.point_only:
+            raise ValueError(f"{self.name!r} is point-only: no scans")
+        run = self.lb_expr(backend, interpret)
+        data = self.data
+
+        def scan(q):
+            pos = run(q)
+            return pos, _window_gather(data, pos, m)
+
+        return scan
+
+    def merged_scan_expr(self, m: int, backend: str = "jnp",
+                         interpret: bool = False) -> Callable:
+        """Scan over the merged (base + delta) view: gather ``m`` from each
+        side and keep the first ``m`` of their sorted union — exact because
+        the merged array's next ``m`` records are contained in the union of
+        the two windows, and both pad with the UINT64_MAX sentinel."""
+        if self.point_only:
+            raise ValueError(f"{self.name!r} is point-only: no scans")
+        run = self.lb_expr(backend, interpret)
+        data = self.data
+
+        def scan(q, delta_padded):
+            pos_b = run(q)
+            pos_d = jnp.searchsorted(
+                delta_padded, q, side="left").astype(jnp.int64)
+            wb = _window_gather(data, pos_b, m).astype(delta_padded.dtype)
+            wd = _window_gather(delta_padded, pos_d, m)
+            window = jnp.sort(
+                jnp.concatenate([wb, wd], axis=-1), axis=-1)[:, :m]
+            return pos_b + pos_d, window
+
+        return scan
+
+    # -- compiled entry points (cached per plan) ---------------------------
+    def _compiled(self, key, make_expr) -> Callable:
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = jax.jit(make_expr())
+            self._cache[key] = fn
+        return fn
+
+    def compile(self, backend: str = "jnp", interpret: bool = False,
+                fused: Optional[bool] = None) -> Callable:
+        """jit'd ``q -> int64 LB ranks`` (the canonical fused lookup)."""
+        # normalize fused before keying the cache: the default (None) and
+        # its resolved value must alias to ONE compiled program
+        if backend != "pallas" or self.point_only:
+            fused = None
+        elif fused is None:
+            fused = self.fused is not None
+        return self._compiled(
+            ("lb", backend, interpret, fused),
+            lambda: self.lb_expr(backend, interpret, fused))
+
+    def compile_merged(self, backend: str = "jnp",
+                       interpret: bool = False) -> Callable:
+        return self._compiled(
+            ("merged", backend, interpret),
+            lambda: self.merged_expr(backend, interpret))
+
+    def compile_scan(self, m: int, backend: str = "jnp",
+                     interpret: bool = False) -> Callable:
+        return self._compiled(
+            ("scan", int(m), backend, interpret),
+            lambda: self.scan_expr(int(m), backend, interpret))
+
+    def compile_merged_scan(self, m: int, backend: str = "jnp",
+                            interpret: bool = False) -> Callable:
+        return self._compiled(
+            ("merged_scan", int(m), backend, interpret),
+            lambda: self.merged_scan_expr(int(m), backend, interpret))
+
+    def scan(self, q, m: int, backend: str = "jnp",
+             interpret: bool = False):
+        """Convenience: materialize ``m`` records from ``LB(q)``."""
+        return self.compile_scan(m, backend, interpret)(q)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+def lower(build: base.IndexBuild, data_jnp,
+          last_mile: Optional[str] = None) -> LookupPlan:
+    """Lower a built index to its `LookupPlan`.
+
+    The lowering contract is exactly the `IndexBuild` surface: ``lookup``
+    is the pure bounds predictor, ``meta["max_err"]`` the static window
+    bound.  ``last_mile`` defaults to the hyperparameter the index was
+    built with (falling back to binary) — the policy every consumer
+    shared before plans existed.
+    """
+    if last_mile is None:
+        last_mile = build.hyper.get("last_mile", "binary")
+    n = int(build.meta.get("n", data_jnp.shape[0]))
+    bounds = BoundsStage(
+        state=build.state,
+        predict=build.lookup,
+        max_err=int(build.meta.get("max_err", n + 1)),
+    )
+    return LookupPlan(
+        name=build.name,
+        bounds=bounds,
+        data=data_jnp,
+        n=n,
+        last_mile=last_mile,
+        point_only=bool(build.meta.get("point_only", False)),
+        fused=FUSED_LOWERERS.get(build.name),
+        meta=dict(build.hyper),
+    )
+
+
+@register_fused("rmi")
+def _rmi_fused(plan: LookupPlan, interpret: bool) -> Callable:
+    """Whole-plan executor for RMI: the fused f32 inference kernel +
+    tiled last-mile search (`kernels/rmi_lookup`).  The f32 state is
+    refit from the plan's keys with error tables re-verified through the
+    kernel's own arithmetic, so the result is still the exact LB rank —
+    bit-identical to every other backend."""
+    from repro.kernels.rmi_lookup import ops as rops
+
+    st = plan._cache.get("_rmi_f32_state")
+    if st is None:
+        st = rops.prepare_f32_state(
+            np.asarray(plan.data),
+            branching=int(plan.meta.get("branching", 1024)))
+        plan._cache["_rmi_f32_state"] = st
+    data = plan.data
+
+    def run(q):
+        return rops.rmi_lookup(st, data, q, interpret=interpret)
+
+    return run

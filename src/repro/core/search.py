@@ -15,9 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-
-def _steps_for(max_width: int) -> int:
-    return int(np.ceil(np.log2(max(2, int(max_width) + 1)))) + 1
+from repro.kernels.common import branchless_lower_bound
 
 
 def bounded_binary(data, q, lo, hi, max_width: int, side: str = "left"):
@@ -25,31 +23,11 @@ def bounded_binary(data, q, lo, hi, max_width: int, side: str = "left"):
 
     ``max_width`` is a static bound on ``hi - lo + 1`` (from the index's error
     guarantee); it fixes the trip count so the loop lowers to a fixed-depth
-    HLO with no data-dependent control flow.
+    HLO with no data-dependent control flow.  One shared implementation with
+    the kernel overflow fallback (`repro.kernels.common`), run in int64 here.
     """
-    n = data.shape[0]
-    lo = lo.astype(jnp.int64)
-    count = (hi + 1 - lo).astype(jnp.int64)
-    count = jnp.maximum(count, 0)
-
-    def body(_, carry):
-        lo, count = carry
-        step = count // 2
-        idx = lo + step
-        probe = jnp.take(data, jnp.clip(idx, 0, n - 1), mode="clip")
-        if side == "left":
-            go_right = probe < q
-        else:  # upper_bound: first element > q
-            go_right = probe <= q
-        # position n (one past the end) must compare as +infinity — found
-        # by the hypothesis edge-key test (q = 2^64-1 with hi = n)
-        go_right &= idx < n
-        lo = jnp.where(go_right, lo + step + 1, lo)
-        count = jnp.where(go_right, count - step - 1, step)
-        return lo, count
-
-    lo, _ = jax.lax.fori_loop(0, _steps_for(max_width), body, (lo, count))
-    return lo
+    return branchless_lower_bound(
+        data, q, lo, hi, max_width, side=side, index_dtype=jnp.int64)
 
 
 def bounded_linear(data, q, lo, hi, max_width: int, chunk: int = 4096):
@@ -121,27 +99,22 @@ SEARCH_FNS = {
 }
 
 
-def fused_lookup_fn(build, data_jnp, last_mile: str = "binary"):
-    """jit'd end-to-end lookup for a built index: bounds + last-mile fixup.
+def fused_lookup_fn(build, data_jnp, last_mile: str = "binary",
+                    backend: str = "jnp"):
+    """Back-compat shim: lower to a `LookupPlan` and compile it.
 
-    The canonical fused pipeline every consumer shares — the benchmark
-    matrix (`benchmarks/_common.full_lookup_fn` delegates here) and the
-    lookup service (`repro.serve.lookup.dispatch`).  The returned callable
-    is closed over the index state, so jit's compile cache keys only on
-    the query-batch shape; the serving dispatcher exploits that by
-    padding batches to power-of-two buckets.
+    The canonical lookup pipeline lives in `repro.core.plan` — every
+    consumer (serving registry, mutable merge, benchmark matrix) lowers
+    through it; this wrapper exists for callers that still think in
+    (build, data) pairs.  The returned callable is closed over the index
+    state, so jit's compile cache keys only on the query-batch shape;
+    the serving dispatcher exploits that by padding batches to
+    power-of-two buckets.
     """
-    max_err = build.meta["max_err"]
-    lookup = build.lookup
-    state = build.state
-    fn = SEARCH_FNS[last_mile]
+    from repro.core import plan as plan_mod
 
-    @jax.jit
-    def run(q):
-        lo, hi = lookup(state, q)
-        return fn(data_jnp, q, lo, hi, max_err)
-
-    return run
+    return plan_mod.lower(
+        build, data_jnp, last_mile=last_mile).compile(backend=backend)
 
 
 def full_binary(data, q):

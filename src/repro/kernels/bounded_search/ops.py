@@ -1,8 +1,10 @@
 """jit'd wrapper: bin queries to data tiles, run the kernel, un-bin.
 
 Binning uses fixed per-tile capacity (GShard-style): the rare overflow
-queries fall back to the pure-jnp bounded binary search, keeping the result
-exact for every input while the kernel path stays fully static-shaped.
+queries fall back to the pure-jnp bounded binary search (the shared
+dtype-parameterized implementation in `repro.kernels.common`, run in
+int32 here), keeping the result exact for every input while the kernel
+path stays fully static-shaped.
 """
 from __future__ import annotations
 
@@ -12,29 +14,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import split_u64, pad_pow2, pad_to
+from repro.kernels.common import (branchless_lower_bound, split_u64,
+                                  pad_pow2, pad_to)
 from repro.kernels.bounded_search.kernel import DATA_TILE, lower_bound_kernel
 
 
-def _fallback_lb(data, q, lo, hi, max_width: int):
-    """Branchless bounded binary search (jnp, int32) for overflow slots."""
-    n = data.shape[0]
-    steps = int(np.ceil(np.log2(max(2, max_width + 1)))) + 1
-    lo = lo.astype(jnp.int32)
-    count = jnp.maximum(hi - lo, 0).astype(jnp.int32)
-
-    def body(_, carry):
-        lo, count = carry
-        step = count // 2
-        idx = lo + step
-        probe = jnp.take(data, jnp.clip(idx, 0, n - 1), mode="clip")
-        go_right = (probe < q) & (idx < n)  # position n compares as +inf
-        lo = jnp.where(go_right, lo + step + 1, lo)
-        count = jnp.where(go_right, count - step - 1, step)
-        return lo, count
-
-    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, count))
-    return lo
+def _fallback_lb(data, q, lo, hi_exclusive, max_width: int):
+    """Overflow-slot fallback: shared branchless search, int32 positions."""
+    return branchless_lower_bound(
+        data, q, lo, hi_exclusive - 1, max_width, index_dtype=jnp.int32)
 
 
 @functools.partial(

@@ -8,7 +8,50 @@ the hardware adaptation of the paper's 64-bit-key experiments (DESIGN.md §2).
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
+
+
+def lb_steps(max_width: int) -> int:
+    """Fixed trip count covering any bounded window of width <= max_width."""
+    return int(np.ceil(np.log2(max(2, int(max_width) + 1)))) + 1
+
+
+def branchless_lower_bound(data, q, lo, hi, max_width: int,
+                           side: str = "left", index_dtype=None):
+    """Branchless lower/upper bound in ``[lo, hi]`` (hi INCLUSIVE).
+
+    The ONE bounded binary search in the repo, parameterized by position
+    dtype: `repro.core.search.bounded_binary` runs it in int64 (x64 core
+    path), the Pallas overflow fallback in `kernels.bounded_search.ops`
+    in int32 (kernel wrappers never require x64 mode).  ``max_width`` is
+    a static bound on ``hi - lo + 1``; it fixes the trip count so the
+    loop lowers to a fixed-depth HLO with no data-dependent control
+    flow.  Position ``n`` (one past the end) compares as +infinity.
+    """
+    n = data.shape[0]
+    if index_dtype is None:
+        index_dtype = lo.dtype
+    lo = lo.astype(index_dtype)
+    count = (hi + 1 - lo).astype(index_dtype)
+    count = jnp.maximum(count, 0)
+
+    def body(_, carry):
+        lo, count = carry
+        step = count // 2
+        idx = lo + step
+        probe = jnp.take(data, jnp.clip(idx, 0, n - 1), mode="clip")
+        if side == "left":
+            go_right = probe < q
+        else:  # upper_bound: first element > q
+            go_right = probe <= q
+        go_right &= idx < n
+        lo = jnp.where(go_right, lo + step + 1, lo)
+        count = jnp.where(go_right, count - step - 1, step)
+        return lo, count
+
+    lo, _ = jax.lax.fori_loop(0, lb_steps(max_width), body, (lo, count))
+    return lo
 
 
 def split_u64(a):

@@ -4,14 +4,15 @@ The merged lookup is one jitted program per base generation:
 
     LB_merged(q) = LB_base(q) + LB_delta(q)
 
-`LB_base` is the canonical fused pipeline (index bounds + bounded
-last-mile search, `core/search.fused_lookup_fn`) already compiled into
-the generation; `LB_delta` is a vectorized `searchsorted` over the
-padded device delta.  Base and delta are disjoint sorted sets, so the
-two lower bounds add exactly — every position the read path returns is
-identical to a lookup over the fully merged sorted array (the invariant
-`tests/test_workloads_mutable.py` pins against `oracle_replay` for
-every LB-capable index type x dataset).
+`LB_base` is the generation's `LookupPlan` (predict + bounded last-mile,
+`repro.core.plan`) inlined through the plan's `compile_merged` transform
+— which means the mutable read path runs on whatever backend the
+generation serves with (jnp or Pallas kernels) for free; `LB_delta` is a
+vectorized `searchsorted` over the padded device delta.  Base and delta
+are disjoint sorted sets, so the two lower bounds add exactly — every
+position the read path returns is identical to a lookup over the fully
+merged sorted array (the invariant `tests/test_workloads_mutable.py`
+pins against `oracle_replay` for every LB-capable index type x dataset).
 
 Concurrency model (DESIGN.md §10.3): the only mutable cell is one
 `MutableView` pointer.  Inserts and compaction-publish replace it under
@@ -44,23 +45,16 @@ LB_INDEXES = ("rmi", "pgm", "radix_spline", "btree", "ibtree", "rbs",
               "binary_search")
 
 
-def make_merged_fn(base_fn: Callable) -> Callable:
+def make_merged_fn(plan, backend: str = "jnp") -> Callable:
     """jit'd merged lookup: (queries, padded delta) -> merged positions.
 
-    The delta is an ARGUMENT, not a closure constant: the compile cache
-    keys on (query bucket, delta bucket) shapes only, so insert traffic
-    re-uses the compiled program until the delta crosses a pow-2 pad
-    boundary."""
-    import jax
-    import jax.numpy as jnp
-
-    @jax.jit
-    def merged(q, delta_padded):
-        lb_base = base_fn(q).astype(jnp.int64)
-        lb_delta = jnp.searchsorted(delta_padded, q, side="left")
-        return lb_base + lb_delta.astype(jnp.int64)
-
-    return merged
+    A thin name over the plan's delta rank-correction transform
+    (`LookupPlan.compile_merged`): the base LB expression is inlined for
+    the chosen backend and the delta is an ARGUMENT, not a closure
+    constant — the compile cache keys on (query bucket, delta bucket)
+    shapes only, so insert traffic re-uses the compiled program until
+    the delta crosses a pow-2 pad boundary."""
+    return plan.compile_merged(backend=backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +70,13 @@ class MutableView:
         """Device merged lookup; `q` is a jnp/np uint64 batch."""
         return self.merged_fn(q, self.delta.device)
 
+    def scan_fn(self, m: int) -> Callable:
+        """Merged-view scan executable ``(q, delta) -> (pos, window)`` —
+        the plan's `compile_merged_scan` transform, cached per
+        (m, backend) on the generation's plan."""
+        return self.generation.plan.compile_merged_scan(
+            m, backend=self.generation.backend)
+
     @property
     def n_keys(self) -> int:
         """Logical key count of the merged view."""
@@ -88,6 +89,7 @@ class MutableIndex:
     def __init__(self, keys: np.ndarray, index: str = "rmi",
                  hyper: Optional[Dict[str, Any]] = None,
                  last_mile: Optional[str] = None,
+                 backend: str = "jnp",
                  compact_threshold: int = 4096,
                  registry: Optional[IndexRegistry] = None,
                  name: str = DEFAULT_NAME,
@@ -97,6 +99,7 @@ class MutableIndex:
         self.index = index
         self.hyper = dict(hyper or {})
         self.last_mile = last_mile
+        self.backend = backend
         self.compact_threshold = int(compact_threshold)
         self.registry = registry if registry is not None else IndexRegistry()
         self.name = name
@@ -111,10 +114,10 @@ class MutableIndex:
         keys = np.asarray(keys, dtype=np.uint64)
         gen = self.registry.build_and_publish(
             self.index, keys, hyper=self.hyper, name=self.name,
-            last_mile=self.last_mile)
+            last_mile=self.last_mile, backend=self.backend)
         return MutableView(generation=gen, base_np=keys,
                            delta=DeltaBuffer.empty(self.pad_quantum),
-                           merged_fn=make_merged_fn(gen.fn))
+                           merged_fn=make_merged_fn(gen.plan, self.backend))
 
     def reset(self, keys: np.ndarray) -> MutableView:
         """Replace the whole key set: fresh base, empty delta."""
@@ -185,10 +188,10 @@ class MutableIndex:
                 if self._view.generation is not snap.generation:
                     return None   # reset() raced the rebuild: stale, drop it
                 gen = self.registry.publish(build, data, name=self.name,
-                                            last_mile=self.last_mile)
+                                            last_mile=self.last_mile,
+                                            backend=self.backend)
                 leftover = self._view.delta.minus(snap.delta)
-                self._view = MutableView(generation=gen,
-                                         base_np=merged_keys,
-                                         delta=leftover,
-                                         merged_fn=make_merged_fn(gen.fn))
+                self._view = MutableView(
+                    generation=gen, base_np=merged_keys, delta=leftover,
+                    merged_fn=make_merged_fn(gen.plan, self.backend))
             return gen

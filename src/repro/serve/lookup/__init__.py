@@ -3,14 +3,15 @@
 The layer between the index structures (`repro.core`) and the workload
 drivers (DESIGN.md §9).  Requests carrying small key arrays are admitted
 asynchronously, coalesced by a deadline/size micro-batcher, dispatched as
-one device-sharded fused lookup (index bounds + last-mile fixup) over the
-`data` mesh axis, and completed through per-request futures.  Index
-generations hot-swap atomically: a rebuild on a fresh key set becomes
-visible between batches, never inside one.
+one device-sharded plan-compiled lookup (`repro.core.plan`: index bounds
++ last-mile stage, jnp or Pallas backend) over the `data` mesh axis, and
+completed through per-request futures.  Index generations hot-swap
+atomically: a rebuild on a fresh key set becomes visible between
+batches, never inside one.
 """
 from repro.serve.lookup.admission import (ClientBacklogFull, LookupFuture,
                                           MicroBatcher)
-from repro.serve.lookup.dispatch import ShardedDispatcher, make_lookup_fn
+from repro.serve.lookup.dispatch import ShardedDispatcher, make_plan
 from repro.serve.lookup.metrics import ServiceMetrics
 from repro.serve.lookup.mutable_service import (MutableLookupService,
                                                 MutableLookupServiceConfig)
@@ -24,7 +25,7 @@ __all__ = [
     "LookupFuture",
     "MicroBatcher",
     "ShardedDispatcher",
-    "make_lookup_fn",
+    "make_plan",
     "ServiceMetrics",
     "Generation",
     "IndexRegistry",

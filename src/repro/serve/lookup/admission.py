@@ -18,13 +18,17 @@ power-of-two bucket anyway, so the compile-cache cost is the same.
 Fairness (optional): with ``max_client_keys`` set, a client that passes
 its id to ``submit`` may hold at most that many pending keys — the
 (minimal) defense against one client monopolizing every flush window.
-Over-cap submits raise `ClientBacklogFull` immediately (backpressure at
-admission, the cheapest point); the strict-FIFO default behavior is
-unchanged when the cap is unset or the client anonymous.
+``client_rate=(rate, burst)`` adds a per-client token bucket on top:
+each client's bucket refills at ``rate`` keys/second up to ``burst``
+tokens, and a submit needing more tokens than the bucket holds is
+rejected.  Both defenses raise `ClientBacklogFull` immediately
+(backpressure at admission, the cheapest point); the strict-FIFO
+default behavior is unchanged when unset or the client anonymous.
 
-Requests carry a ``kind`` tag ("read" by default); the mutable service
-admits inserts through the same queue with ``kind="insert"``, so reads
-and writes share one admission order — the property the oracle-replay
+Requests carry a ``kind`` tag ("read" by default); scans ride the same
+queue with ``kind="scan"`` (``aux`` = scan length) and the mutable
+service admits inserts with ``kind="insert"``, so reads, scans, and
+writes share one admission order — the property the oracle-replay
 invariant is stated against.
 """
 from __future__ import annotations
@@ -80,7 +84,8 @@ class PendingRequest:
     keys: np.ndarray          # 1-D uint64
     future: LookupFuture
     t_submit: float           # perf_counter at admission
-    kind: str = "read"        # "read" | "insert" (mutable service)
+    kind: str = "read"        # "read" | "scan" | "insert" (mutable service)
+    aux: int = 0              # scan length for kind="scan", else 0
     client: Optional[object] = None   # fairness-cap accounting id
 
 
@@ -89,22 +94,43 @@ class MicroBatcher:
 
     def __init__(self, max_batch: int, deadline_s: float,
                  counter: Optional[MonotonicCounter] = None,
-                 max_client_keys: Optional[int] = None):
+                 max_client_keys: Optional[int] = None,
+                 client_rate: Optional[Tuple[float, float]] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if max_client_keys is not None and max_client_keys < 1:
             raise ValueError("max_client_keys must be >= 1")
+        if client_rate is not None:
+            rate, burst = client_rate
+            if rate <= 0 or burst < 1:
+                raise ValueError("client_rate needs rate > 0 and burst >= 1")
+            client_rate = (float(rate), float(burst))
         self.max_batch = int(max_batch)
         self.deadline_s = float(deadline_s)
         self.max_client_keys = max_client_keys
+        self.client_rate = client_rate
         self._counter = counter if counter is not None else MonotonicCounter()
         self._pending: "collections.deque[PendingRequest]" = collections.deque()
         self._n_keys = 0
         self._client_keys: dict = {}
+        self._buckets: dict = {}   # client -> (tokens, last_refill_t)
         self._cond = threading.Condition()
 
     # -- admission -------------------------------------------------------
-    def submit(self, keys, kind: str = "read",
+    def _check_rate_locked(self, client, n_keys: int, now: float) -> None:
+        """Token bucket: refill, then spend ``n_keys`` or reject.  Burst
+        bounds the instantaneous spike; rate the sustained key/s."""
+        rate, burst = self.client_rate
+        tokens, last = self._buckets.get(client, (burst, now))
+        tokens = min(burst, tokens + (now - last) * rate)
+        if n_keys > tokens:
+            self._buckets[client] = (tokens, now)
+            raise ClientBacklogFull(
+                f"client {client!r} rate-limited: {n_keys} keys > "
+                f"{tokens:.1f} tokens (rate={rate}/s, burst={burst:.0f})")
+        self._buckets[client] = (tokens - n_keys, now)
+
+    def submit(self, keys, kind: str = "read", aux: int = 0,
                client=None) -> Tuple[int, LookupFuture]:
         # Always copy: the request may sit queued for deadline_s, and a
         # client reusing its buffer must not mutate keys already admitted.
@@ -114,15 +140,26 @@ class MicroBatcher:
         rid = self._counter.next()
         fut = LookupFuture(rid, keys.size)
         req = PendingRequest(rid, keys, fut, time.perf_counter(),
-                             kind=kind, client=client)
+                             kind=kind, aux=int(aux), client=client)
         with self._cond:
-            if self.max_client_keys is not None and client is not None:
-                held = self._client_keys.get(client, 0)
-                if held + keys.size > self.max_client_keys:
-                    raise ClientBacklogFull(
-                        f"client {client!r} holds {held} pending keys; "
-                        f"+{keys.size} exceeds cap {self.max_client_keys}")
-                self._client_keys[client] = held + keys.size
+            if client is not None:
+                # backlog cap first (checks without consuming), then the
+                # token bucket (consumes) — a cap rejection must not burn
+                # tokens, and a rate rejection must not count as backlog.
+                if self.max_client_keys is not None:
+                    held = self._client_keys.get(client, 0)
+                    if held + keys.size > self.max_client_keys:
+                        raise ClientBacklogFull(
+                            f"client {client!r} holds {held} pending keys; "
+                            f"+{keys.size} exceeds cap {self.max_client_keys}")
+                if self.client_rate is not None:
+                    # timestamp read INSIDE the lock: refills stay monotone
+                    # under concurrent submits of the same client
+                    self._check_rate_locked(client, keys.size,
+                                            time.perf_counter())
+                if self.max_client_keys is not None:
+                    self._client_keys[client] = (
+                        self._client_keys.get(client, 0) + keys.size)
             self._pending.append(req)
             self._n_keys += keys.size
             self._cond.notify_all()
@@ -204,4 +241,12 @@ class MicroBatcher:
                         self._client_keys[r.client] = left
                     else:
                         del self._client_keys[r.client]
+            # prune refilled-to-burst buckets: a full bucket is identical
+            # to no bucket, and ephemeral client ids must not leak memory
+            if self.client_rate is not None and self._buckets:
+                rate, burst = self.client_rate
+                now = time.perf_counter()
+                for c in [c for c, (tok, last) in self._buckets.items()
+                          if tok + (now - last) * rate >= burst]:
+                    del self._buckets[c]
             return out

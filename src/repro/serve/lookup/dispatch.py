@@ -1,21 +1,25 @@
-"""Sharded dispatch: one fused lookup over the `data` mesh axis (§9.2).
+"""Sharded dispatch: one plan-compiled lookup over the `data` mesh axis (§9.2).
 
 Generalizes mode (c) of `benchmarks/parallel_scaling.py` into a reusable
 engine.  The query batch is padded to a power-of-two bucket (a multiple
 of the shard count), placed over the mesh's data axis through the
 `repro.dist.sharding` activation rule for the logical `batch` axis, and
-run through the fused index-bounds + last-mile pipeline
-(`repro.core.search.fused_lookup_fn`).  jit picks the partitioning up
-from the input sharding, so the very same compiled lookup serves 1 or N
-devices; the index state and the key array stay replicated (they are the
-small side — the paper's learned indexes are KB–MB against GB of data).
+run through a `repro.core.plan.LookupPlan` executable — the dispatcher
+shards PLANS, not hand-rolled closures: pass a plan and it compiles (and
+caches) the lookup for the requested backend, or pass any jitted
+callable (e.g. a merged-view or scan executable) directly.  jit picks
+the partitioning up from the input sharding, so the very same compiled
+lookup serves 1 or N devices; the index state and the key array stay
+replicated (they are the small side — the paper's learned indexes are
+KB–MB against GB of data).
 
-Bit-exactness: every lane of the fused pipeline is an independent
+Bit-exactness: every lane of the plan pipeline is an independent
 gather/compare chain over the same replicated arrays, so the sharded
 result is identical — not approximately, bit-for-bit — to the
 single-device result on the same queries (pinned by
-tests/test_serve_lookup.py on all four surrogate datasets).  Pad lanes
-repeat the first real key and are sliced off before completion.
+tests/test_serve_lookup.py on all four surrogate datasets, and across
+backends by tests/test_plan.py).  Pad lanes repeat the first real key
+and are sliced off before completion.
 """
 from __future__ import annotations
 
@@ -25,7 +29,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import search
+from repro.core import plan as plan_mod
 from repro.dist import sharding as SH
 
 #: Smallest dispatch width: keeps tiny deadline-flush batches from
@@ -33,15 +37,13 @@ from repro.dist import sharding as SH
 PAD_QUANTUM = 128
 
 
-def make_lookup_fn(build, data_jnp, last_mile: Optional[str] = None):
-    """Fused lookup closed over one index generation's state.
+def make_plan(build, data_jnp, last_mile: Optional[str] = None):
+    """Lower one index generation to its `LookupPlan`.
 
     ``last_mile`` defaults to the hyperparameter the index was built
     with, falling back to binary — same policy as the benchmarks.
     """
-    if last_mile is None:
-        last_mile = build.hyper.get("last_mile", "binary")
-    return search.fused_lookup_fn(build, data_jnp, last_mile=last_mile)
+    return plan_mod.lower(build, data_jnp, last_mile=last_mile)
 
 
 def data_axis_mesh():
@@ -69,8 +71,17 @@ class ShardedDispatcher:
         r = p % self.n_shards
         return p + (self.n_shards - r if r else 0)
 
-    def __call__(self, fn, keys: np.ndarray) -> np.ndarray:
-        """Run `fn` (a fused lookup) on `keys`; returns int64 positions."""
+    def __call__(self, fn, keys: np.ndarray, backend: str = "jnp"):
+        """Run a plan (compiled on demand for ``backend``) or any jitted
+        lookup callable on `keys`.
+
+        Returns int64 positions for plain lookups; executables that
+        return a tuple (e.g. a plan's scan: positions + record window)
+        come back as a tuple of host arrays, each sliced to the real
+        batch size along axis 0.
+        """
+        if isinstance(fn, plan_mod.LookupPlan):
+            fn = fn.compile(backend=backend)
         keys = np.asarray(keys, dtype=np.uint64)
         m = keys.size
         p = self.padded_size(m)
@@ -83,4 +94,6 @@ class ShardedDispatcher:
         qj = jax.device_put(
             jnp.asarray(q), SH.act_sharding((p,), ("batch",), self.mesh))
         out = fn(qj)
+        if isinstance(out, tuple):
+            return tuple(np.asarray(o)[:m] for o in out)
         return np.asarray(out, dtype=np.int64)[:m]

@@ -67,7 +67,7 @@ class MutableLookupService(LookupService):
         if self.mindex is None:
             self.mindex = MutableIndex(
                 keys, index=self.cfg.index, hyper=self.cfg.hyper,
-                last_mile=self.cfg.last_mile,
+                last_mile=self.cfg.last_mile, backend=self.cfg.backend,
                 compact_threshold=self.cfg.compact_threshold,
                 registry=self.registry, name=DEFAULT_NAME,
                 pad_quantum=self.cfg.pad_quantum)
@@ -87,23 +87,36 @@ class MutableLookupService(LookupService):
 
     # -- flusher ---------------------------------------------------------
     def _process_batch(self, batch) -> None:
-        i = 0
-        while i < len(batch):
-            j = i
-            while j < len(batch) and batch[j].kind == batch[i].kind:
-                j += 1
-            run = batch[i:j]
-            if batch[i].kind == "insert":
-                self._apply_inserts(run)
-            else:
-                self._dispatch_reads(run)
-            i = j
+        """Unlike the immutable service (one pinned context per batch),
+        the context re-pins PER RUN: an insert run changes the delta,
+        and a read/scan run admitted after it in the same batch must
+        observe it — the oracle admission-order invariant."""
+        for run in self._runs(batch, key=lambda r: r.kind):
+            self._dispatch_run(run[0].kind, run)   # ctx=None: pin per run
 
-    def _pinned_lookup_fn(self):
-        """Reads pin one immutable (generation, delta) PAIR — the atomic
-        unit that keeps a concurrent compaction from being observed
-        half-applied (delta key counted twice or dropped)."""
-        return self.mindex.view().lookup
+    def _dispatch_run(self, kind: str, run, ctx=None) -> None:
+        """Insert runs land in the delta; reads and scans route through
+        the base service's kind dispatcher."""
+        if kind == "insert":
+            self._apply_inserts(run)
+        else:
+            super()._dispatch_run(kind, run, ctx)
+
+    def _pin_context(self):
+        """Each run pins one immutable (generation, delta) PAIR — the
+        atomic unit that keeps a concurrent compaction from being
+        observed half-applied (delta key counted twice or dropped).
+        Scans go through the plan's merged-scan transform (sorted union
+        of the base and delta windows == a scan over the fully merged
+        array)."""
+        view = self.mindex.view()
+        delta_dev = view.delta.device
+
+        def scan_for(m: int):
+            fn = view.scan_fn(m)
+            return lambda q: fn(q, delta_dev)
+
+        return view.lookup, scan_for
 
     def _apply_inserts(self, run) -> None:
         keys = (run[0].keys if len(run) == 1

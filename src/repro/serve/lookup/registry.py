@@ -2,13 +2,16 @@
 
 A `Generation` is one fully-built, immutable serving unit: the
 `IndexBuild` (state pytree + interpreting functions), the device copy of
-the sorted key array, and the fused lookup closed over both.  The
-registry's only mutable cell is a name -> Generation pointer; `publish`
-replaces that pointer AFTER the build completes, so a reader can observe
-the old generation or the new one, never a half-built one.  Swapping
-does not drain in-flight batches: a dispatched batch pins the generation
-it was taken with (`service._dispatch_once` reads `current()` exactly
-once per batch) and completes against it even if a swap lands mid-batch.
+the sorted key array, the `LookupPlan` the build lowers to, and the
+plan-compiled lookup for the generation's backend.  The registry's only
+mutable cell is a name -> Generation pointer; `publish` replaces that
+pointer AFTER the build completes, so a reader can observe the old
+generation or the new one, never a half-built one.  Swapping does not
+drain in-flight batches: a dispatched batch pins the generation it was
+taken with (`service._process_batch` reads `current()` exactly once per
+batch via `_pin_context`; the mutable service re-pins per same-kind run
+so reads observe earlier insert runs) and completes against it even if
+a swap lands mid-batch.
 
 Rebuilds (`build_and_publish`) run entirely outside the lock — index
 construction is seconds of host-side numpy (benchmarks/build_times.csv)
@@ -24,8 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import base
+from repro.core.plan import LookupPlan
 from repro.serve.common import MonotonicCounter
-from repro.serve.lookup.dispatch import make_lookup_fn
+from repro.serve.lookup.dispatch import make_plan
 
 DEFAULT_NAME = "default"
 
@@ -37,8 +41,15 @@ class Generation:
     version: int
     build: base.IndexBuild
     data: Any                 # jnp device copy of the sorted keys
-    fn: Callable              # fused lookup: queries -> positions
+    plan: LookupPlan          # the build lowered to the plan IR
+    fn: Callable              # plan-compiled lookup: queries -> positions
     n_keys: int
+    backend: str = "jnp"      # plan backend this generation serves with
+
+    def scan_fn(self, m: int) -> Callable:
+        """Plan-compiled scan (positions + m-record window), cached on
+        the plan per (m, backend) — op kind "scan" dispatches here."""
+        return self.plan.compile_scan(m, backend=self.backend)
 
 
 class IndexRegistry:
@@ -56,14 +67,19 @@ class IndexRegistry:
 
     def publish(self, build: base.IndexBuild, data,
                 name: str = DEFAULT_NAME,
-                last_mile: Optional[str] = None) -> Generation:
-        """Wrap a COMPLETE IndexBuild into a generation and swap it in."""
+                last_mile: Optional[str] = None,
+                backend: str = "jnp") -> Generation:
+        """Lower a COMPLETE IndexBuild to its plan, wrap it into a
+        generation, and swap it in."""
+        plan = make_plan(build, data, last_mile=last_mile)
         gen = Generation(
             version=self._versions.next(),
             build=build,
             data=data,
-            fn=make_lookup_fn(build, data, last_mile=last_mile),
+            plan=plan,
+            fn=plan.compile(backend=backend),
             n_keys=int(data.shape[0]),
+            backend=backend,
         )
         with self._lock:
             self._current[name] = gen
@@ -72,10 +88,12 @@ class IndexRegistry:
     def build_and_publish(self, index: str, keys: np.ndarray,
                           hyper: Optional[Dict[str, Any]] = None,
                           name: str = DEFAULT_NAME,
-                          last_mile: Optional[str] = None) -> Generation:
+                          last_mile: Optional[str] = None,
+                          backend: str = "jnp") -> Generation:
         """Rebuild on a fresh key set, then swap — build is outside the
         lock, the swap is one pointer assignment."""
         keys = np.asarray(keys, dtype=np.uint64)
         build = base.REGISTRY[index](keys, **(hyper or {}))
         data = jnp.asarray(keys)
-        return self.publish(build, data, name=name, last_mile=last_mile)
+        return self.publish(build, data, name=name, last_mile=last_mile,
+                            backend=backend)

@@ -47,10 +47,13 @@ class LookupServiceConfig:
     index: str = "rmi"                 # repro.core.base.REGISTRY name
     hyper: Dict[str, Any] = dataclasses.field(default_factory=dict)
     last_mile: Optional[str] = None    # None -> the build's own choice
+    backend: str = "jnp"               # LookupPlan backend ("jnp" | "pallas")
     max_batch: int = 4096              # keys per dispatch (flush trigger)
     deadline_ms: float = 2.0           # oldest-request flush deadline
     pad_quantum: int = PAD_QUANTUM
     max_client_keys: Optional[int] = None   # per-client pending-key cap
+    client_rate: Optional[tuple] = None     # per-client (rate keys/s, burst)
+    max_scan_length: int = 4096             # per-request scan-window cap
 
 
 class LookupService:
@@ -65,7 +68,8 @@ class LookupService:
         self.batcher = MicroBatcher(
             self.cfg.max_batch, self.cfg.deadline_ms / 1e3,
             counter=counter if counter is not None else MonotonicCounter(),
-            max_client_keys=self.cfg.max_client_keys)
+            max_client_keys=self.cfg.max_client_keys,
+            client_rate=self.cfg.client_rate)
         self._dispatch_lock = threading.Lock()   # one batch at a time
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -76,7 +80,7 @@ class LookupService:
         """Rebuild on a fresh key set and hot-swap it in (no draining)."""
         return self.registry.build_and_publish(
             self.cfg.index, keys, hyper=self.cfg.hyper,
-            last_mile=self.cfg.last_mile)
+            last_mile=self.cfg.last_mile, backend=self.cfg.backend)
 
     @property
     def generation(self) -> Generation:
@@ -91,6 +95,28 @@ class LookupService:
         fairness id: with `max_client_keys` configured, an over-backlog
         client's submit raises `ClientBacklogFull` instead of queueing."""
         _, fut = self.batcher.submit(keys, client=client)
+        return fut
+
+    def scan(self, keys, length: int, client=None) -> LookupFuture:
+        """Admit one range-scan request (op kind "scan"): the future
+        resolves to ``(positions, window)`` where ``window[i]`` holds the
+        ``length`` records from ``LB(keys[i])`` (UINT64_MAX sentinel past
+        the end) — the plan's `compile_scan` materialization, so YCSB-E
+        traces execute end-to-end instead of position-only."""
+        # bound the client-supplied length: the window is a [B, length]
+        # gather AND a compile-shape axis (each distinct length caches a
+        # compiled executable), so it must not be client-unbounded
+        if not 1 <= length <= self.cfg.max_scan_length:
+            raise ValueError(
+                f"scan length must be in [1, {self.cfg.max_scan_length}]")
+        # reject point-only indexes at admission (cheapest point); the
+        # per-group guard in _complete_run still covers the race where a
+        # hot-swap to a point-only index lands after admission
+        if self.generation.plan.point_only:
+            raise ValueError(
+                f"index {self.cfg.index!r} is point-only: no scans")
+        _, fut = self.batcher.submit(keys, kind="scan", aux=int(length),
+                                     client=client)
         return fut
 
     def lookup(self, keys, timeout: Optional[float] = 30.0) -> np.ndarray:
@@ -114,38 +140,84 @@ class LookupService:
             self._process_batch(batch)
             return True
 
+    @staticmethod
+    def _runs(batch, key):
+        """Yield maximal consecutive runs of `batch` sharing `key(req)`,
+        in order — the one splitter every dispatch path shares."""
+        i = 0
+        while i < len(batch):
+            j = i
+            while j < len(batch) and key(batch[j]) == key(batch[i]):
+                j += 1
+            yield batch[i:j]
+            i = j
+
     def _process_batch(self, batch) -> None:
-        """Hook for subclasses; the base service only has read requests."""
-        self._dispatch_reads(batch)
+        """Split the taken batch into consecutive same-kind runs and
+        dispatch each — admission order is preserved within and across
+        runs, so FIFO completion per client still holds.  The lookup
+        context (`_pin_context`) is read ONCE for the whole batch: a
+        hot-swap lands between batches, never inside one.  (The mutable
+        subclass re-pins per run instead — an insert run changes the
+        delta and a later read run in the same batch must observe it.)"""
+        ctx = self._pin_context()
+        for run in self._runs(batch, key=lambda r: r.kind):
+            self._dispatch_run(run[0].kind, run, ctx)
 
-    def _pinned_lookup_fn(self):
-        """The lookup callable one read batch completes against — read
-        exactly once per batch, so a hot-swap lands between batches,
-        never inside one."""
-        return self.registry.current().fn
+    def _dispatch_run(self, kind: str, run, ctx=None) -> None:
+        """Route one same-kind run; subclasses add kinds (inserts)."""
+        lookup_fn, scan_for = ctx if ctx is not None else self._pin_context()
+        if kind == "scan":
+            self._dispatch_scans(run, scan_for)
+        else:
+            self._dispatch_reads(run, lookup_fn)
 
-    def _dispatch_reads(self, batch) -> None:
-        fn = self._pinned_lookup_fn()   # pinned for this whole batch
-        keys = (batch[0].keys if len(batch) == 1
-                else np.concatenate([r.keys for r in batch]))
+    def _pin_context(self):
+        """``(lookup_fn, m -> scan executable)`` bound to ONE immutable
+        generation — the snapshot a batch completes against."""
+        gen = self.registry.current()
+        return gen.fn, gen.scan_fn
+
+    def _complete_run(self, group, make_fn) -> None:
+        """Dispatch one request group through ``make_fn()`` and complete
+        its futures in order; tuple results (scans) are sliced per array.
+        Failures fail the group's futures, never the flusher — including
+        executable CONSTRUCTION failures (``make_fn`` runs inside the
+        guard: scan compilation rejects point-only plans)."""
+        keys = (group[0].keys if len(group) == 1
+                else np.concatenate([r.keys for r in group]))
         t0 = time.perf_counter()
         try:
-            out = self.dispatcher(fn, keys)
-        except BaseException as e:  # noqa: BLE001 — fail the batch, not the flusher
-            for r in batch:
+            out = self.dispatcher(make_fn(), keys)
+        except BaseException as e:  # noqa: BLE001 — fail the group, not the flusher
+            for r in group:
                 r.future._set_exception(e)
             return
         t1 = time.perf_counter()
         off = 0
-        for r in batch:
-            r.future._set_result(out[off:off + r.keys.size])
-            off += r.keys.size
+        for r in group:
+            end = off + r.keys.size
+            r.future._set_result(tuple(o[off:end] for o in out)
+                                 if isinstance(out, tuple) else out[off:end])
+            off = end
         self.metrics.observe_batch(
             n_keys=keys.size,
             padded=self.dispatcher.padded_size(keys.size),
-            n_requests=len(batch),
-            t_oldest_submit=batch[0].t_submit,
+            n_requests=len(group),
+            t_oldest_submit=group[0].t_submit,
             t_start=t0, t_end=t1)
+
+    def _dispatch_reads(self, batch, lookup_fn) -> None:
+        self._complete_run(batch, lambda: lookup_fn)
+
+    def _dispatch_scans(self, batch, scan_for) -> None:
+        """Dispatch a run of scan requests, grouped by scan length (the
+        static window width is a compile-shape axis).  Futures resolve to
+        ``(positions, window)`` per request.  `_dispatch_run` is the one
+        resolver of the pinned context these run against."""
+        for group in self._runs(batch, key=lambda r: r.aux):
+            m = int(group[0].aux)
+            self._complete_run(group, lambda m=m: scan_for(m))
 
     def flush(self) -> bool:
         """Dispatch one due batch if any (size or deadline trigger)."""

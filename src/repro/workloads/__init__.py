@@ -14,7 +14,8 @@ from repro.workloads.distributions import (DISTRIBUTIONS, hot_set_ranks,
 from repro.workloads.workload import (MIXES, OP_INSERT, OP_NAMES, OP_RANGE,
                                       OP_READ, Workload, make_point_queries,
                                       make_workload)
-from repro.workloads.replay import oracle_replay, replay_on_service
+from repro.workloads.replay import (oracle_replay, oracle_scan_replay,
+                                    replay_on_service)
 
 __all__ = [
     "DISTRIBUTIONS",
@@ -31,5 +32,6 @@ __all__ = [
     "make_workload",
     "make_point_queries",
     "oracle_replay",
+    "oracle_scan_replay",
     "replay_on_service",
 ]

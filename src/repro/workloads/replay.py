@@ -13,20 +13,35 @@ returns the per-op results aligned with the oracle's output.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.workloads.workload import OP_INSERT, Workload
+from repro.workloads.workload import OP_INSERT, OP_RANGE, Workload
 
-__all__ = ["oracle_replay", "replay_on_service"]
+__all__ = ["oracle_replay", "oracle_scan_replay", "replay_on_service"]
+
+_UINT64_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
 
 
 def oracle_replay(base_keys: np.ndarray, wl: Workload) -> np.ndarray:
     """Per-op ground truth: LB position for reads/ranges, 0/1 admitted
     flag for inserts (set semantics — a present key is not re-inserted)."""
+    out, _ = oracle_scan_replay(base_keys, wl, scan_windows=False)
+    return out
+
+
+def oracle_scan_replay(base_keys: np.ndarray, wl: Workload,
+                       scan_windows: bool = True,
+                       ) -> Tuple[np.ndarray, Dict[int, np.ndarray]]:
+    """`oracle_replay` plus, for every OP_RANGE op, the materialized
+    window: the ``aux[i]`` keys from the op's LB position over the array
+    AS OF that step, padded past the end with UINT64_MAX — the same
+    sentinel the plan's windowed gather uses, so service scans compare
+    bit-for-bit.  Returns (per-op results, {op index: window})."""
     arr = np.asarray(base_keys, dtype=np.uint64).copy()
     out = np.empty(wl.n_ops, dtype=np.int64)
+    windows: Dict[int, np.ndarray] = {}
     for i in range(wl.n_ops):
         k = wl.keys[i]
         if wl.ops[i] == OP_INSERT:
@@ -37,16 +52,24 @@ def oracle_replay(base_keys: np.ndarray, wl: Workload) -> np.ndarray:
                 arr = np.insert(arr, p, k)
                 out[i] = 1
         else:
-            out[i] = int(np.searchsorted(arr, k, side="left"))
-    return out
+            p = int(np.searchsorted(arr, k, side="left"))
+            out[i] = p
+            if scan_windows and wl.ops[i] == OP_RANGE:
+                m = int(wl.aux[i])
+                w = np.full(m, _UINT64_MAX, dtype=np.uint64)
+                seg = arr[p:p + m]
+                w[:seg.size] = seg
+                windows[i] = w
+    return out, windows
 
 
 def replay_on_service(wl: Workload, svc, chunk: int = 64,
                       timeout: Optional[float] = 60.0,
-                      compact_every: Optional[int] = None) -> np.ndarray:
-    """Drive a `MutableLookupService` through ``wl``; returns per-op
-    results aligned with `oracle_replay` (positions for reads/ranges,
-    admitted flags for inserts).
+                      compact_every: Optional[int] = None,
+                      scan_ranges: bool = False):
+    """Drive a lookup service through ``wl``; returns per-op results
+    aligned with `oracle_replay` (positions for reads/ranges, admitted
+    flags for inserts).
 
     Consecutive same-op runs are submitted as one request (up to
     ``chunk`` ops) — admission order equals trace order, which the
@@ -57,18 +80,31 @@ def replay_on_service(wl: Workload, svc, chunk: int = 64,
     ops (on top of the service's own threshold trigger) — the invariant
     says results must not change, so replays use it to pin hot-swap
     correctness mid-trace.
+
+    With ``scan_ranges=True``, OP_RANGE ops execute END-TO-END as op
+    kind "scan" (`svc.scan`): each range materializes its ``aux``-length
+    record window through the plan's windowed gather, and the return
+    value becomes ``(out, windows)`` with ``windows[i]`` comparable
+    bit-for-bit to `oracle_scan_replay`'s.  Runs are split on the op
+    kind AND scan length (a compile-shape axis).
     """
-    futs = []      # (start, end, future)
+    futs = []      # (start, end, op, future)
     i = 0
     next_compact = compact_every
     while i < wl.n_ops:
         j = i
         op = wl.ops[i]
-        while j < wl.n_ops and wl.ops[j] == op and j - i < chunk:
+        while (j < wl.n_ops and wl.ops[j] == op and j - i < chunk
+               and wl.aux[j] == wl.aux[i]):
             j += 1
         ks = wl.keys[i:j]
-        fut = svc.insert(ks) if op == OP_INSERT else svc.submit(ks)
-        futs.append((i, j, fut))
+        if op == OP_INSERT:
+            fut = svc.insert(ks)
+        elif op == OP_RANGE and scan_ranges:
+            fut = svc.scan(ks, int(wl.aux[i]))
+        else:
+            fut = svc.submit(ks)
+        futs.append((i, j, op, fut))
         if svc._thread is None:
             svc.drain()
         if next_compact is not None and j >= next_compact:
@@ -78,6 +114,16 @@ def replay_on_service(wl: Workload, svc, chunk: int = 64,
     if svc._thread is None:
         svc.drain()
     out = np.empty(wl.n_ops, dtype=np.int64)
-    for start, end, fut in futs:
-        out[start:end] = fut.result(timeout)
+    windows: Dict[int, np.ndarray] = {}
+    for start, end, op, fut in futs:
+        res = fut.result(timeout)
+        if op == OP_RANGE and scan_ranges:
+            pos, win = res
+            out[start:end] = pos
+            for k in range(start, end):
+                windows[k] = win[k - start]
+        else:
+            out[start:end] = res
+    if scan_ranges:
+        return out, windows
     return out

@@ -1,0 +1,249 @@
+"""LookupPlan IR: backend parity, scan materialization, plan transforms.
+
+The acceptance contract of the plan engine (DESIGN.md §11): the "jnp"
+and "pallas" backends return BIT-IDENTICAL LB ranks for every index on
+every dataset and last-mile choice — including through the mutable
+layer's hot-swap and the sharded dispatcher — and the range-scan
+materialization matches a plain numpy oracle.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data import sosd
+from repro.core import base, plan
+
+DATASETS = ("amzn", "face", "osm", "wiki")
+INDEXES = [
+    ("rmi", dict(branching=512)),
+    ("pgm", dict(eps=32)),
+    ("radix_spline", dict(eps=16, radix_bits=12)),
+    ("rbs", dict(radix_bits=12)),
+    ("btree", dict(sample=8)),
+    ("binary_search", {}),
+]
+LAST_MILES = ("binary", "linear", "interpolation")
+
+N_KEYS, N_Q = 8_000, 512
+
+
+@functools.lru_cache(maxsize=None)
+def _cell(ds: str):
+    keys = sosd.generate(ds, N_KEYS, seed=3)
+    q = sosd.make_queries(keys, N_Q, seed=5, present_frac=0.7)
+    return keys, q, np.searchsorted(keys, q)
+
+
+# ---------------------------------------------------------------------------
+# The parity matrix: index x dataset x last-mile, jnp vs pallas
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ds", DATASETS)
+@pytest.mark.parametrize("name,hyper", INDEXES,
+                         ids=[n for n, _ in INDEXES])
+def test_backend_parity_matrix(name, hyper, ds):
+    keys, q, lb = _cell(ds)
+    data, qj = jnp.asarray(keys), jnp.asarray(q)
+    b = base.REGISTRY[name](keys, **hyper)
+    for lm in LAST_MILES:
+        p = plan.lower(b, data, last_mile=lm)
+        got_jnp = np.asarray(p.compile(backend="jnp")(qj))
+        got_pal = np.asarray(p.compile(backend="pallas",
+                                       interpret=True)(qj))
+        np.testing.assert_array_equal(got_jnp, lb)
+        np.testing.assert_array_equal(got_pal, got_jnp)
+
+
+def test_rmi_unfused_pallas_parity():
+    """The generic bounds->bounded_search kernel path (fused=False) must
+    agree with both the fused whole-plan kernel and the jnp backend."""
+    keys, q, lb = _cell("osm")
+    b = base.REGISTRY["rmi"](keys, branching=512)
+    p = plan.lower(b, jnp.asarray(keys))
+    qj = jnp.asarray(q)
+    fused = np.asarray(p.compile(backend="pallas", interpret=True)(qj))
+    unfused = np.asarray(
+        p.compile(backend="pallas", interpret=True, fused=False)(qj))
+    np.testing.assert_array_equal(fused, lb)
+    np.testing.assert_array_equal(unfused, lb)
+
+
+def test_point_only_plan_parity():
+    """robin_hash lowers to a degenerate (point-only) plan; both backends
+    share the probe-window path and must agree: position for present
+    keys, -1 for absent."""
+    keys, q, _ = _cell("wiki")
+    b = base.REGISTRY["robin_hash"](keys, load_factor=0.5)
+    p = plan.lower(b, jnp.asarray(keys))
+    qj = jnp.asarray(q)
+    got_jnp = np.asarray(p.compile(backend="jnp")(qj))
+    got_pal = np.asarray(p.compile(backend="pallas")(qj))
+    np.testing.assert_array_equal(got_jnp, got_pal)
+    present = np.isin(q, keys)
+    assert (keys[got_jnp[present]] == q[present]).all()
+    assert (got_jnp[~present] == -1).all()
+    with pytest.raises(ValueError):
+        p.scan_expr(4)
+
+
+def test_unknown_backend_rejected():
+    keys, _, _ = _cell("amzn")
+    b = base.REGISTRY["rbs"](keys, radix_bits=12)
+    p = plan.lower(b, jnp.asarray(keys))
+    with pytest.raises(ValueError):
+        p.compile(backend="tpu_v9")
+
+
+def test_compile_cache_reuses_fn():
+    keys, _, _ = _cell("amzn")
+    b = base.REGISTRY["rbs"](keys, radix_bits=12)
+    p = plan.lower(b, jnp.asarray(keys))
+    assert p.compile() is p.compile()
+    assert p.compile(backend="pallas") is not p.compile()
+
+
+# ---------------------------------------------------------------------------
+# Range-scan materialization vs numpy oracle
+# ---------------------------------------------------------------------------
+def _scan_oracle(keys, lb, m):
+    out = np.full((len(lb), m), np.uint64(0xFFFFFFFFFFFFFFFF))
+    for i, p in enumerate(lb):
+        seg = keys[p:p + m]
+        out[i, :seg.size] = seg
+    return out
+
+
+@pytest.mark.parametrize("name,hyper", [("rmi", dict(branching=512)),
+                                        ("btree", dict(sample=8))],
+                         ids=["rmi", "btree"])
+@pytest.mark.parametrize("backend", ("jnp", "pallas"))
+def test_scan_matches_numpy_oracle(name, hyper, backend):
+    keys, q, lb = _cell("face")
+    b = base.REGISTRY[name](keys, **hyper)
+    p = plan.lower(b, jnp.asarray(keys))
+    m = 24
+    pos, win = p.scan(jnp.asarray(q), m, backend=backend, interpret=True)
+    np.testing.assert_array_equal(np.asarray(pos), lb)
+    np.testing.assert_array_equal(np.asarray(win), _scan_oracle(keys, lb, m))
+
+
+def test_scan_window_past_the_end():
+    """Queries beyond the last key materialize all-sentinel windows."""
+    keys, _, _ = _cell("amzn")
+    b = base.REGISTRY["rbs"](keys, radix_bits=12)
+    p = plan.lower(b, jnp.asarray(keys))
+    q = np.full(4, max(int(keys[-1]) + 1, 0), dtype=np.uint64)
+    pos, win = p.scan(jnp.asarray(q), 8)
+    assert (np.asarray(pos) == len(keys)).all()
+    assert (np.asarray(win) == np.uint64(0xFFFFFFFFFFFFFFFF)).all()
+
+
+# ---------------------------------------------------------------------------
+# Parity through the mutable layer (delta + hot-swap) and the dispatcher
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("index", ("rmi", "pgm", "btree"))
+def test_mutable_hot_swap_backend_parity(index):
+    from repro.mutable.index import MutableIndex
+
+    keys, q, _ = _cell("osm")
+    rng = np.random.default_rng(11)
+    inserts = rng.integers(int(keys[0]), int(keys[-1]), 300,
+                           dtype=np.uint64)
+
+    results = {}
+    for backend in ("jnp", "pallas"):
+        mi = MutableIndex(keys, index=index, backend=backend,
+                          compact_threshold=1 << 30)
+        mi.insert(inserts)
+        mid = mi.lookup(q)                      # merged: base + delta
+        gen = mi.compact()                      # hot-swap to a new base
+        assert gen is not None
+        post = mi.lookup(q)
+        np.testing.assert_array_equal(mid, post)  # swap changes nothing
+        results[backend] = post
+
+    merged_keys = np.unique(np.concatenate([keys, inserts]))
+    expected = np.searchsorted(merged_keys, q)
+    np.testing.assert_array_equal(results["jnp"], expected)
+    np.testing.assert_array_equal(results["jnp"], results["pallas"])
+
+
+@pytest.mark.parametrize("backend", ("jnp", "pallas"))
+def test_sharded_dispatcher_accepts_plans(backend):
+    from repro.serve.lookup.dispatch import ShardedDispatcher
+
+    keys, q, lb = _cell("wiki")
+    b = base.REGISTRY["radix_spline"](keys, eps=16, radix_bits=12)
+    p = plan.lower(b, jnp.asarray(keys))
+    disp = ShardedDispatcher()
+    out = disp(p, q, backend=backend)     # plan, not a closure
+    np.testing.assert_array_equal(out, lb)
+
+
+def test_service_runs_on_pallas_backend():
+    """One LookupService path end-to-end on the plan engine's kernel
+    backend, including a scan op kind through the micro-batcher."""
+    from repro.serve.lookup import LookupService, LookupServiceConfig
+
+    keys, q, lb = _cell("amzn")
+    svc = LookupService(keys, LookupServiceConfig(
+        index="rmi", hyper=dict(branching=512), backend="pallas",
+        max_batch=256))
+    assert svc.generation.backend == "pallas"
+    np.testing.assert_array_equal(svc.lookup(q), lb)
+
+    fut = svc.scan(q[:100], 16)
+    svc.drain()
+    pos, win = fut.result(30.0)
+    np.testing.assert_array_equal(pos, lb[:100])
+    np.testing.assert_array_equal(win, _scan_oracle(keys, lb[:100], 16))
+
+
+def test_scan_on_point_only_index_fails_future_not_flusher():
+    """A scan against a point-only index is rejected at admission; if
+    one slips past (hot-swap race), the compile error fails the FUTURE,
+    and the flusher keeps serving later requests."""
+    from repro.serve.lookup import LookupService, LookupServiceConfig
+
+    keys, q, _ = _cell("amzn")
+    svc = LookupService(keys, LookupServiceConfig(
+        index="robin_hash", max_batch=64))
+    with pytest.raises(ValueError):
+        svc.scan(q[:8], 8)
+    # race path: admit the scan directly through the batcher
+    _, fut = svc.batcher.submit(q[:8], kind="scan", aux=8)
+    svc.drain()
+    with pytest.raises(ValueError):
+        fut.result(10.0)
+    # the service still completes point lookups afterwards
+    present = keys[:50]
+    out = svc.lookup(present)
+    assert (keys[out] == present).all()
+
+
+def test_mutable_service_ycsb_e_scans_end_to_end():
+    """A YCSB-E trace (ranges + inserts) executes end-to-end: every range
+    op materializes its window, verified against the numpy scan oracle
+    at every step across delta growth."""
+    from repro import workloads
+    from repro.serve.lookup import (MutableLookupService,
+                                    MutableLookupServiceConfig)
+
+    keys, _, _ = _cell("face")
+    wl = workloads.make_workload(keys, 400, mix="ycsb_e", dist="zipfian",
+                                 seed=9, range_len=16)
+    svc = MutableLookupService(keys, MutableLookupServiceConfig(
+        index="radix_spline", hyper=dict(eps=16), max_batch=256,
+        compact_threshold=1 << 30, auto_compact=False))
+    got, windows = workloads.replay_on_service(wl, svc, chunk=64,
+                                               scan_ranges=True)
+    exp, exp_windows = workloads.oracle_scan_replay(keys, wl)
+    np.testing.assert_array_equal(got, exp)
+    assert set(windows) == set(exp_windows) != set()
+    for i in exp_windows:
+        np.testing.assert_array_equal(windows[i], exp_windows[i])

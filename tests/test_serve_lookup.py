@@ -107,6 +107,50 @@ def test_batcher_cap_disabled_by_default():
     assert b.pending_requests == 5
 
 
+def test_batcher_token_bucket_rejects_over_burst():
+    b = MicroBatcher(max_batch=10_000, deadline_s=60.0,
+                     client_rate=(1.0, 100))   # ~no refill within the test
+    b.submit(np.arange(90, dtype=np.uint64) + 1, client="a")
+    with pytest.raises(ClientBacklogFull):
+        b.submit(np.arange(50, dtype=np.uint64) + 1, client="a")
+    # other clients and anonymous submits are unaffected
+    b.submit(np.arange(90, dtype=np.uint64) + 1, client="b")
+    b.submit(np.arange(500, dtype=np.uint64) + 1)
+    assert b.pending_requests == 3
+    # a flush does NOT return tokens (rate limits sustained keys/s, not
+    # backlog); the client stays limited until the bucket refills
+    b.take(force=True)
+    with pytest.raises(ClientBacklogFull):
+        b.submit(np.arange(50, dtype=np.uint64) + 1, client="a")
+
+
+def test_batcher_token_bucket_refills_at_rate():
+    b = MicroBatcher(max_batch=10_000, deadline_s=60.0,
+                     client_rate=(10_000.0, 64))
+    b.submit(np.arange(64, dtype=np.uint64) + 1, client="a")  # bucket empty
+    time.sleep(0.02)                       # ~200 tokens refilled, cap 64
+    b.submit(np.arange(64, dtype=np.uint64) + 1, client="a")
+    assert b.pending_requests == 2
+
+
+def test_batcher_token_bucket_validates_config():
+    with pytest.raises(ValueError):
+        MicroBatcher(max_batch=4, deadline_s=1.0, client_rate=(0.0, 10))
+    with pytest.raises(ValueError):
+        MicroBatcher(max_batch=4, deadline_s=1.0, client_rate=(5.0, 0))
+
+
+def test_batcher_cap_rejection_burns_no_tokens():
+    """A backlog-cap rejection must not consume rate-limit tokens."""
+    b = MicroBatcher(max_batch=10_000, deadline_s=60.0,
+                     max_client_keys=50, client_rate=(1.0, 1000))
+    with pytest.raises(ClientBacklogFull):
+        b.submit(np.arange(60, dtype=np.uint64) + 1, client="a")  # over cap
+    # the full burst is still available for an in-cap submit
+    b.submit(np.arange(50, dtype=np.uint64) + 1, client="a")
+    assert b.pending_requests == 1
+
+
 # ---------------------------------------------------------------------------
 # service: FIFO completion, deadline flush, verification vs core
 # ---------------------------------------------------------------------------

@@ -50,28 +50,90 @@ def time_lookup(fn: Callable, *args, repeats: int = REPEATS) -> float:
     return best
 
 
-def full_lookup_fn(build, data_jnp, last_mile: str = "binary",
-                   backend=None):
+def full_lookup_fn(build, data_jnp, last_mile=None, backend=None):
     """jit'd end-to-end lookup: lower the build to its `LookupPlan`
     (repro.core.plan) and compile for the requested backend (default:
-    the --backend / SOSD_BACKEND axis)."""
+    the --backend / SOSD_BACKEND axis).  ``last_mile`` None defers to
+    the build's own hyperparameter (binary unless the index chose
+    otherwise — ibtree's interpolation probe must actually run)."""
     from repro.core import plan
 
     return plan.lower(build, data_jnp, last_mile=last_mile).compile(
         backend=backend or BACKEND)
 
 
+def build_index(spec, keys, hyper=None):
+    """Build one index through THE entry point (`repro.core.spec.build`).
+
+    ``spec`` is an `IndexSpec` or an index name (then ``hyper`` holds
+    the partial hyperparameters) — either way the build is validated
+    and carries its spec."""
+    from repro.core import spec as S
+
+    return S.build(S.coerce(spec, hyper), keys)
+
+
+def parse_spec(text):
+    """`--spec` / SOSD_SPEC value: inline IndexSpec JSON, or @file.json."""
+    from repro.core import spec as S
+
+    if text.startswith("@"):
+        with open(text[1:]) as f:
+            text = f.read()
+    return S.IndexSpec.from_json(text).validated()
+
+
+#: Default hard byte budget when --autotune is passed with no value.
+AUTOTUNE_DEFAULT_BYTES = 1 << 20
+
+
+def tuned_spec(ds: str, budget: int, names=None, backends=("jnp",),
+               max_configs=None, n: int = None, seed: int = 0):
+    """Tune one dataset under a byte budget (cached per cell): the
+    per-dataset spec+backend the --autotune axes run with."""
+    key = (ds, budget, tuple(names or ()), tuple(backends), max_configs,
+           n or N_KEYS, seed)
+    res = _TUNED.get(key)
+    if res is None:
+        from repro.core.spec import Tuner
+
+        res = Tuner(names=names, max_bytes=budget, backends=backends,
+                    max_configs=max_configs, seed=seed).tune(
+                        dataset(ds, n=n or N_KEYS))
+        _TUNED[key] = res
+    return res
+
+
+_TUNED: Dict = {}
+
+
 def backend_arg(argv=None):
     """Parse --backend from argv (benchmark __main__s); also updates the
     module-level default so nested helpers pick it up."""
+    return bench_args(argv).backend
+
+
+def bench_args(argv=None):
+    """Shared benchmark axes: ``--backend`` (plan backend), ``--spec``
+    (IndexSpec JSON or @file — run ONE declarative spec instead of the
+    hand-rolled cells), ``--autotune [MAX_BYTES]`` (let the budget
+    tuner pick the per-dataset spec), ``--smoke`` (tiny CI cell).
+    Env fallbacks: SOSD_BACKEND / SOSD_SPEC / SOSD_AUTOTUNE."""
     import argparse
 
     global BACKEND
     ap = argparse.ArgumentParser(add_help=False)
     ap.add_argument("--backend", choices=("jnp", "pallas"), default=BACKEND)
+    ap.add_argument("--spec", default=os.environ.get("SOSD_SPEC"))
+    ap.add_argument("--autotune", nargs="?",
+                    const=str(AUTOTUNE_DEFAULT_BYTES),
+                    default=os.environ.get("SOSD_AUTOTUNE"))
+    ap.add_argument("--smoke", action="store_true")
     ns, _ = ap.parse_known_args(argv)
     BACKEND = ns.backend
-    return ns.backend
+    ns.spec = parse_spec(ns.spec) if ns.spec else None
+    ns.autotune = int(ns.autotune) if ns.autotune is not None else None
+    return ns
 
 
 def emit(rows, header=None, path=None):

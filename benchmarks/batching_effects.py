@@ -21,18 +21,19 @@ from benchmarks import _common as C
 def run(ds="amzn", out_dir="benchmarks/results", backend=None):
     import jax
     import jax.numpy as jnp
-    from repro.core import base
+    from repro.core.spec import IndexSpec
 
     keys = C.dataset(ds)
     q = C.queries(ds)
     data_jnp = jnp.asarray(keys)
     rows = []
-    for name, hyper in [("rmi", dict(branching=4096)),
-                        ("pgm", dict(eps=64)),
-                        ("radix_spline", dict(eps=32, radix_bits=16)),
-                        ("btree", dict(sample=8)),
-                        ("rbs", dict(radix_bits=16))]:
-        b = base.REGISTRY[name](keys, **hyper)
+    for sp in [IndexSpec("rmi", dict(branching=4096)),
+               IndexSpec("pgm", dict(eps=64)),
+               IndexSpec("radix_spline", dict(eps=32, radix_bits=16)),
+               IndexSpec("btree", dict(sample=8)),
+               IndexSpec("rbs", dict(radix_bits=16))]:
+        b = C.build_index(sp, keys)
+        name = b.name
         fn = C.full_lookup_fn(b, data_jnp, backend=backend)
         q_jnp = jnp.asarray(q)
         fused = C.time_lookup(fn, q_jnp)

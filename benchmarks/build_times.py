@@ -12,23 +12,24 @@ from benchmarks import _common as C
 
 
 def run(sizes=(100_000, 400_000), ds="amzn", out_dir="benchmarks/results"):
-    from repro.core import base
+    from repro.core import spec as S
     from repro.data import sosd
 
-    configs = [("rmi", dict(branching=4096)),
-               ("pgm", dict(eps=64)),
-               ("radix_spline", dict(eps=32, radix_bits=16)),
-               ("btree", dict(sample=8)),
-               ("rbs", dict(radix_bits=16)),
-               ("robin_hash", dict(load_factor=0.5))]
+    configs = [S.IndexSpec("rmi", dict(branching=4096)),
+               S.IndexSpec("pgm", dict(eps=64)),
+               S.IndexSpec("radix_spline", dict(eps=32, radix_bits=16)),
+               S.IndexSpec("btree", dict(sample=8)),
+               S.IndexSpec("rbs", dict(radix_bits=16)),
+               S.IndexSpec("robin_hash", dict(load_factor=0.5))]
     rows = []
     for n in sizes:
         keys = sosd.generate(ds, n, seed=1)
-        for name, hyper in configs:
+        for sp in configs:
+            sp = sp.validated()   # validate OUTSIDE the timed region
             t0 = time.perf_counter()
-            base.REGISTRY[name](keys, **hyper)
+            S.build(sp, keys)
             t1 = time.perf_counter()
-            rows.append([ds, n, name, round(t1 - t0, 4)])
+            rows.append([ds, n, sp.index, round(t1 - t0, 4)])
     C.emit(rows, header=["dataset", "n_keys", "index", "build_seconds"],
            path=os.path.join(out_dir, "build_times.csv"))
     return rows

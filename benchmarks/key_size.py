@@ -21,7 +21,7 @@ def _to_32bit(keys: np.ndarray) -> np.ndarray:
 
 def run(ds="amzn", out_dir="benchmarks/results", backend=None):
     import jax.numpy as jnp
-    from repro.core import base
+    from repro.core.spec import IndexSpec
     from repro.data import sosd
     from repro.kernels.rmi_lookup import ops as rops
 
@@ -31,14 +31,14 @@ def run(ds="amzn", out_dir="benchmarks/results", backend=None):
     for width, keys in (("64bit", keys64), ("32bit", keys32)):
         q = sosd.make_queries(keys, C.N_QUERIES, seed=3)
         data_jnp, q_jnp = jnp.asarray(keys), jnp.asarray(q)
-        for name, hyper in [("rmi", dict(branching=4096)),
-                            ("pgm", dict(eps=64)),
-                            ("radix_spline", dict(eps=32, radix_bits=16)),
-                            ("btree", dict(sample=8))]:
-            b = base.REGISTRY[name](keys, **hyper)
+        for sp in [IndexSpec("rmi", dict(branching=4096)),
+                   IndexSpec("pgm", dict(eps=64)),
+                   IndexSpec("radix_spline", dict(eps=32, radix_bits=16)),
+                   IndexSpec("btree", dict(sample=8))]:
+            b = C.build_index(sp, keys)
             fn = C.full_lookup_fn(b, data_jnp, backend=backend)
             secs = C.time_lookup(fn, q_jnp)
-            rows.append([width, name, b.size_bytes,
+            rows.append([width, b.name, b.size_bytes,
                          round(C.ns_per_lookup(secs, len(q)), 2), "f64-core"])
         # kernel path (f32 inference, verified error tables)
         st = rops.prepare_f32_state(keys, branching=4096)

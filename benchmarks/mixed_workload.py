@@ -53,10 +53,10 @@ DATASETS = ["amzn", "osm"]
 N_OPS = int(os.environ.get("MIXED_OPS", 6_000))
 
 
-def _run_cell(ds: str, index: str, mix: str, dist: str, n_ops: int,
-              n_keys: int, backend: str = "jnp"):
+def _run_cell(ds: str, spec, mix: str, dist: str, n_ops: int,
+              n_keys: int, backend: str = "jnp", tuner=None):
     from repro import workloads
-    from repro.serve.lookup import (DEFAULT_HYPER, MutableLookupService,
+    from repro.serve.lookup import (MutableLookupService,
                                     MutableLookupServiceConfig)
 
     keys = C.dataset(ds, n=n_keys)
@@ -68,7 +68,7 @@ def _run_cell(ds: str, index: str, mix: str, dist: str, n_ops: int,
 
     t0 = time.perf_counter()
     svc = MutableLookupService(keys, MutableLookupServiceConfig(
-        index=index, hyper=DEFAULT_HYPER.get(index, {}), backend=backend,
+        spec=spec.replace(backend=backend), tuner=tuner,
         max_batch=1024, deadline_ms=2.0, compact_threshold=threshold))
     build_s = time.perf_counter() - t0
 
@@ -88,9 +88,12 @@ def _run_cell(ds: str, index: str, mix: str, dist: str, n_ops: int,
     verified = bool(np.array_equal(got, expected)) and all(
         np.array_equal(windows[i], exp_windows[i]) for i in exp_windows)
     snap = svc.metrics.snapshot()
+    final_spec = svc.mindex.spec     # tuner may have retuned at compaction
     return {
         "dataset": ds,
-        "index": index,
+        "index": spec.index,
+        "final_spec": final_spec.to_dict(),
+        "retuned": final_spec != spec.replace(backend=backend).validated(),
         "mix": mix,
         "dist": dist,
         "n_keys": int(len(keys)),
@@ -112,21 +115,42 @@ def _run_cell(ds: str, index: str, mix: str, dist: str, n_ops: int,
 
 def run(out_dir: str = "benchmarks/results", n_ops: int = N_OPS,
         n_keys: int = C.N_KEYS, datasets=None, indexes=None,
-        mix_points=None, backend=None):
+        mix_points=None, backend=None, spec=None, autotune=None):
+    """``spec`` pins ONE IndexSpec for every cell; ``autotune`` (a byte
+    budget) both picks the per-dataset starting spec AND hands the
+    tuner to the service so compactions retune against the delta-merged
+    key set (DESIGN.md §12.4)."""
+    from repro.core.spec import Tuner
+    from repro.serve.lookup import default_spec
+
     backend = backend or C.BACKEND
     rows = []
     for ds in (datasets or DATASETS):
-        for index in (indexes or INDEX_NAMES):
+        tuner = None
+        if spec is not None:
+            cells = [spec]
+        elif autotune is not None:
+            tuner = Tuner(names=tuple(indexes or INDEX_NAMES),
+                          max_bytes=autotune)
+            cells = [C.tuned_spec(ds, autotune,
+                                  names=tuple(indexes or INDEX_NAMES),
+                                  n=n_keys).spec]
+        else:
+            cells = [default_spec(i) for i in (indexes or INDEX_NAMES)]
+        for sp in cells:
             for mix, dist in (mix_points or MIX_POINTS):
-                r = _run_cell(ds, index, mix, dist, n_ops, n_keys,
-                              backend=backend)
+                r = _run_cell(ds, sp, mix, dist, n_ops, n_keys,
+                              backend=backend, tuner=tuner)
                 rows.append(r)
-                print(f"{ds:5s} {index:12s} {mix:7s} {dist:10s} "
+                print(f"{ds:5s} {r['index']:12s} {mix:7s} {dist:10s} "
                       f"{r['ops_per_s']/1e3:8.1f} kops/s  "
                       f"compactions={r['compactions']}  "
                       f"admitted={r['admitted']}  "
+                      f"retuned={r['retuned']}  "
                       f"verified={r['verified_vs_oracle']}", flush=True)
-    path = os.path.join(out_dir, "mixed_workload.json")
+    path = os.path.join(out_dir, "mixed_workload.json"
+                        if autotune is None else
+                        "mixed_workload_autotune.json")
     os.makedirs(out_dir, exist_ok=True)
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
@@ -150,5 +174,8 @@ def smoke(backend=None):
 
 
 if __name__ == "__main__":
-    _backend = C.backend_arg()
-    smoke(_backend) if "--smoke" in sys.argv[1:] else run(backend=_backend)
+    _ns = C.bench_args()
+    if _ns.smoke:
+        smoke(_ns.backend)
+    else:
+        run(backend=_ns.backend, spec=_ns.spec, autotune=_ns.autotune)

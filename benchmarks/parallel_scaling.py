@@ -31,30 +31,31 @@ def _shard_queries(q, mesh):
 def run(ds="amzn", out_dir="benchmarks/results", backend=None):
     import numpy as np
     import jax.numpy as jnp
-    from repro.core import analysis, base
+    from repro.core import analysis
+    from repro.core.spec import IndexSpec
 
     keys = C.dataset(ds)
     q = C.queries(ds)
     data_jnp = jnp.asarray(keys)
     rows = []
     # (a) batch scaling
-    for name, hyper in [("rmi", dict(branching=4096)),
-                        ("pgm", dict(eps=64)),
-                        ("radix_spline", dict(eps=32, radix_bits=16)),
-                        ("rbs", dict(radix_bits=16))]:
-        b = base.REGISTRY[name](keys, **hyper)
+    for sp in [IndexSpec("rmi", dict(branching=4096)),
+               IndexSpec("pgm", dict(eps=64)),
+               IndexSpec("radix_spline", dict(eps=32, radix_bits=16)),
+               IndexSpec("rbs", dict(radix_bits=16))]:
+        b = C.build_index(sp, keys)
         fn = C.full_lookup_fn(b, data_jnp, backend=backend)
         for m in (1_000, 10_000, 100_000):
             qm = jnp.asarray(q[:m])
             secs = C.time_lookup(fn, qm)
-            rows.append(["batch_scaling", name, m,
+            rows.append(["batch_scaling", b.name, m,
                          round(m / secs / 1e6, 3), ""])
     # (b) size vs throughput at fixed load
     for name, ladder in [("rmi", [dict(branching=2**i) for i in (8, 12, 16)]),
                          ("pgm", [dict(eps=e) for e in (512, 64, 16)]),
                          ("btree", [dict(sample=s) for s in (64, 8, 1)])]:
         for hyper in ladder:
-            b = base.REGISTRY[name](keys, **hyper)
+            b = C.build_index(IndexSpec(name, hyper), keys)
             fn = C.full_lookup_fn(b, data_jnp, backend=backend)
             qm = jnp.asarray(q)
             secs = C.time_lookup(fn, qm)
@@ -70,13 +71,14 @@ def run(ds="amzn", out_dir="benchmarks/results", backend=None):
 
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("data",))
-    for name, hyper in [("rmi", dict(branching=4096)), ("pgm", dict(eps=64))]:
-        b = base.REGISTRY[name](keys, **hyper)
+    for sp in [IndexSpec("rmi", dict(branching=4096)),
+               IndexSpec("pgm", dict(eps=64))]:
+        b = C.build_index(sp, keys)
         fn = C.full_lookup_fn(b, data_jnp, backend=backend)
         m = (len(q) // n_dev) * n_dev
         qm = _shard_queries(jnp.asarray(q[:m]), mesh)
         secs = C.time_lookup(fn, qm)
-        rows.append(["sharded_dispatch", name, n_dev,
+        rows.append(["sharded_dispatch", b.name, n_dev,
                      round(m / secs / 1e6, 3), ""])
     C.emit(rows, header=["mode", "index", "x", "mlookups_per_s",
                          "gbytes_touched_per_s"],

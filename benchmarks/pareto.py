@@ -1,24 +1,40 @@
 """Paper Fig. 7 / Table 2: size x lookup-latency Pareto analysis.
 
-For each dataset, sweep each structure's size ladder, measure batched
-end-to-end lookup time, report all points + the Pareto frontier, and check
-the paper's headline claims (learned structures Pareto-competitive on
+For each dataset, sweep each structure's schema-generated spec ladder
+(`repro.core.tuning` — every build goes through the declarative
+`IndexSpec` entry point), measure batched end-to-end lookup time,
+report all points + the Pareto frontier, and check the paper's
+headline claims (learned structures Pareto-competitive on
 amzn/face/wiki; rbs strong on osm; hash fastest point lookups).
+
+Axes:
+    --spec JSON|@file    benchmark ONE declarative spec per dataset
+    --autotune [BYTES]   per-dataset budget tuning: the `spec.Tuner`
+                         picks spec+backend under a hard byte budget
+                         (both plan backends measured); fails nonzero
+                         if the chosen build violates the budget
+    --smoke              tiny autotune cell (2 indexes, capped ladders)
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 
 import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/pareto.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 from benchmarks import _common as C
 
 
 def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results",
-        backend=None):
+        backend=None, spec=None):
     import jax.numpy as jnp
-    from repro.core import base, tuning
+    from repro.core import tuning
 
     rows = []
     for ds in datasets:
@@ -27,25 +43,33 @@ def run(datasets=("amzn", "face", "osm", "wiki"), out_dir="benchmarks/results",
         data_jnp = jnp.asarray(keys)
         q_jnp = jnp.asarray(q)
         lb = np.searchsorted(keys, q)
-        for build in tuning.sweep(keys, names=("rmi", "pgm", "radix_spline",
-                                               "btree", "rbs", "binary_search")):
-            fn = C.full_lookup_fn(build, data_jnp, backend=backend)
+        specs = [spec] if spec is not None else tuning.spec_sweep()
+        for sp in specs:
+            # an explicit --spec declares its own backend; sweep cells
+            # run on the --backend axis.  The recorded spec must name
+            # what was MEASURED, so the CSV row reproduces the cell.
+            be = sp.backend if spec is not None else (backend or C.BACKEND)
+            build = C.build_index(sp, keys)
+            fn = C.full_lookup_fn(build, data_jnp, backend=be)
             secs = C.time_lookup(fn, q_jnp)
             got = np.asarray(fn(q_jnp))
             exact = bool((got == lb).all())
-            rows.append([ds, build.name, json.dumps(build.hyper).replace(",", ";"),
+            measured = sp.replace(
+                backend=be, last_mile=build.hyper.get("last_mile"))
+            rows.append([ds, build.name, measured.to_json().replace(",", ";"),
                          build.size_bytes,
                          round(C.ns_per_lookup(secs, len(q)), 2), exact])
         # hash baseline: point lookups only (Table 2 companion)
-        hb = base.REGISTRY["robin_hash"](keys, load_factor=0.5)
+        hb = C.build_index("robin_hash", keys, dict(load_factor=0.5))
         import jax
         hfn = jax.jit(lambda qq: hb.lookup(hb.state, qq))
         present = keys[np.random.default_rng(0).integers(0, len(keys), len(q))]
         secs = C.time_lookup(hfn, jnp.asarray(present))
-        rows.append([ds, "robin_hash", "{'load_factor': 0.5}",
+        rows.append([ds, "robin_hash",
+                     hb.meta["spec"].to_json().replace(",", ";"),
                      hb.size_bytes, round(C.ns_per_lookup(secs, len(q)), 2),
                      True])
-    C.emit(rows, header=["dataset", "index", "hyper", "size_bytes",
+    C.emit(rows, header=["dataset", "index", "spec", "size_bytes",
                          "ns_per_lookup", "exact"],
            path=os.path.join(out_dir, "pareto.csv"))
     return rows
@@ -64,6 +88,55 @@ def pareto_summary(rows):
     return out
 
 
+def run_autotune(budget: int, datasets=("amzn", "face", "osm", "wiki"),
+                 out_dir="benchmarks/results", smoke=False,
+                 backends=("jnp", "pallas")):
+    """Budget-tuned Pareto companion: one chosen spec per dataset.
+
+    Each cell runs the `spec.Tuner` under a HARD ``budget`` bytes cap
+    (backend picked by measurement across ``backends``), verifies the
+    tuned build returns exact LB ranks, and re-checks the byte budget
+    on the BUILT index — a tuner that returns a spec violating its own
+    budget exits nonzero (the CI contract)."""
+    import jax.numpy as jnp
+    from repro.core.spec import Tuner
+
+    names = ("rmi", "pgm") if smoke else None
+    rows = []
+    for ds in datasets if not smoke else datasets[:1]:
+        keys = C.dataset(ds)
+        q = C.queries(ds)
+        res = Tuner(names=names, max_bytes=budget, backends=backends,
+                    max_configs=3 if smoke else None).tune(keys)
+        build = res.build
+        fn = C.full_lookup_fn(build, jnp.asarray(keys),
+                              backend=res.spec.backend)
+        got = np.asarray(fn(jnp.asarray(q)))
+        exact = bool((got == np.searchsorted(keys, q)).all())
+        within = build.size_bytes <= budget
+        rows.append([ds, res.spec.index, res.spec.to_json().replace(",", ";"),
+                     build.size_bytes, budget,
+                     round(min(c.cost_ns for c in res.frontier), 1)
+                     if res.frontier else "",
+                     {k: round(v, 1) for k, v in res.backend_ns.items()},
+                     len(res.evaluated), exact, within])
+    C.emit(rows, header=["dataset", "index", "spec", "size_bytes",
+                         "budget_bytes", "frontier_min_cost_ns",
+                         "backend_ns", "n_evaluated", "exact",
+                         "within_budget"],
+           path=os.path.join(out_dir, "pareto_autotune.csv"))
+    bad = [r for r in rows if not (r[-1] and r[-2])]
+    if bad:
+        raise SystemExit(
+            f"{len(bad)}/{len(rows)} autotuned cells violated the byte "
+            f"budget or returned inexact lookups: {bad}")
+    return rows
+
+
 if __name__ == "__main__":
-    rows = run(backend=C.backend_arg())
-    print("\npareto frontier families:", pareto_summary(rows))
+    ns = C.bench_args()
+    if ns.autotune is not None:
+        run_autotune(budget=ns.autotune, smoke=ns.smoke)
+    else:
+        rows = run(backend=ns.backend, spec=ns.spec)
+        print("\npareto frontier families:", pareto_summary(rows))

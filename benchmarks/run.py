@@ -30,6 +30,11 @@ def main() -> None:
                     default=os.environ.get("SOSD_BACKEND", "jnp"),
                     help="LookupPlan backend for every lookup benchmark "
                          "(pallas = kernel path, interpret mode on CPU)")
+    ap.add_argument("--autotune", type=int, default=None, metavar="BYTES",
+                    help="add the budget-tuner rows: per-dataset "
+                         "spec+backend selection under this hard byte "
+                         "budget (pareto_autotune), and compaction-retuned "
+                         "mixed-workload cells")
     args = ap.parse_args()
     # _common reads the env at import; set it before the imports below
     os.environ["SOSD_BACKEND"] = args.backend
@@ -63,6 +68,18 @@ def main() -> None:
                       f"/{len(rows)};compactions="
                       f"{sum(r['compactions'] for r in rows)}"),
     ]
+    if args.autotune is not None:
+        jobs.append((
+            "pareto_autotune",
+            lambda: pareto.run_autotune(budget=args.autotune),
+            lambda rows: "; ".join(f"{r[0]}:{r[1]}@{r[3]}B" for r in rows)))
+        jobs.append((
+            "mixed_workload_autotuned",
+            lambda: mixed_workload.run(autotune=args.autotune),
+            lambda rows: f"verified="
+                         f"{sum(r['verified_vs_oracle'] for r in rows)}"
+                         f"/{len(rows)};retuned="
+                         f"{sum(r['retuned'] for r in rows)}"))
     for name, fn, derive in jobs:
         t0 = time.perf_counter()
         result = fn()

@@ -11,21 +11,22 @@ from benchmarks import _common as C
 def run(sizes=(100_000, 200_000, 400_000, 800_000), ds="amzn",
         out_dir="benchmarks/results", backend=None):
     import jax.numpy as jnp
-    from repro.core import base
+    from repro.core.spec import IndexSpec
     from repro.data import sosd
 
-    configs = [("rmi", dict(branching=4096)),
-               ("pgm", dict(eps=64)),
-               ("radix_spline", dict(eps=32, radix_bits=16)),
-               ("btree", dict(sample=8)),
-               ("binary_search", dict())]
+    configs = [IndexSpec("rmi", dict(branching=4096)),
+               IndexSpec("pgm", dict(eps=64)),
+               IndexSpec("radix_spline", dict(eps=32, radix_bits=16)),
+               IndexSpec("btree", dict(sample=8)),
+               IndexSpec("binary_search")]
     rows = []
     for n in sizes:
         keys = sosd.generate(ds, n, seed=1)
         q = sosd.make_queries(keys, C.N_QUERIES, seed=2)
         data_jnp, q_jnp = jnp.asarray(keys), jnp.asarray(q)
-        for name, hyper in configs:
-            b = base.REGISTRY[name](keys, **hyper)
+        for sp in configs:
+            b = C.build_index(sp, keys)
+            name = b.name
             fn = C.full_lookup_fn(b, data_jnp, backend=backend)
             secs = C.time_lookup(fn, q_jnp)
             rows.append([ds, n, name, b.size_bytes,

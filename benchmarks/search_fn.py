@@ -23,23 +23,27 @@ from benchmarks import _common as C
 
 
 def run(datasets=("amzn", "osm"), out_dir="benchmarks/results",
-        backend=None):
+        backend=None, spec=None):
     import numpy as np
     import jax.numpy as jnp
-    from repro.core import base
+    from repro.core.spec import IndexSpec
 
     backend = backend or C.BACKEND
+    cells = [spec] if spec is not None else [
+        IndexSpec("rmi", dict(branching=2048)),
+        IndexSpec("pgm", dict(eps=128)),
+        IndexSpec("radix_spline", dict(eps=64, radix_bits=14)),
+        IndexSpec("rbs", dict(radix_bits=14)),
+    ]
     rows = []
     for ds in datasets:
         keys = C.dataset(ds)
         q = C.queries(ds)
         data_jnp, q_jnp = jnp.asarray(keys), jnp.asarray(q)
         lb = np.searchsorted(keys, q)
-        for name, hyper in [("rmi", dict(branching=2048)),
-                            ("pgm", dict(eps=128)),
-                            ("radix_spline", dict(eps=64, radix_bits=14)),
-                            ("rbs", dict(radix_bits=14))]:
-            b = base.REGISTRY[name](keys, **hyper)
+        for sp in cells:
+            b = C.build_index(sp, keys)
+            name = b.name
             for lm in ("binary", "linear", "interpolation"):
                 fn = C.full_lookup_fn(b, data_jnp, last_mile=lm,
                                       backend=backend)
@@ -57,4 +61,5 @@ def run(datasets=("amzn", "osm"), out_dir="benchmarks/results",
 
 
 if __name__ == "__main__":
-    run(backend=C.backend_arg(sys.argv[1:]))
+    ns = C.bench_args(sys.argv[1:])
+    run(backend=ns.backend, spec=ns.spec)

@@ -41,7 +41,7 @@ from benchmarks import _common as C
 BATCH_POINTS = [(512, 32), (4096, 256)]
 
 #: index types swept, at the shared serving-default hyperparameters
-#: (repro.serve.lookup.DEFAULT_HYPER — same table the serve driver uses)
+#: (repro.serve.lookup.default_spec — same table the serve driver uses)
 INDEX_NAMES = ["rmi", "pgm", "radix_spline"]
 
 DATASETS = ["amzn", "face", "osm", "wiki"]
@@ -51,19 +51,17 @@ DATASETS = ["amzn", "face", "osm", "wiki"]
 N_SERVE_Q = int(os.environ.get("SERVE_Q", min(C.N_QUERIES, 10_000)))
 
 
-def _run_cell(ds: str, index: str, max_batch: int, request_keys: int,
+def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
               backend: str = "jnp"):
     import jax.numpy as jnp
-    from repro.serve.lookup import (DEFAULT_HYPER, LookupService,
-                                    LookupServiceConfig)
-    hyper = DEFAULT_HYPER.get(index, {})
+    from repro.serve.lookup import LookupService, LookupServiceConfig
 
     keys = C.dataset(ds)
     q = C.queries(ds)[:N_SERVE_Q]
 
     t0 = time.perf_counter()
     svc = LookupService(keys, LookupServiceConfig(
-        index=index, hyper=hyper, backend=backend,
+        spec=spec.replace(backend=backend),
         max_batch=max_batch, deadline_ms=2.0))
     build_s = time.perf_counter() - t0
 
@@ -84,7 +82,8 @@ def _run_cell(ds: str, index: str, max_batch: int, request_keys: int,
     snap = svc.metrics.snapshot()
     return {
         "dataset": ds,
-        "index": index,
+        "index": spec.index,
+        "spec": svc.generation.spec.to_dict(),
         "max_batch": max_batch,
         "backend": backend,
         "request_keys": request_keys,
@@ -101,16 +100,31 @@ def _run_cell(ds: str, index: str, max_batch: int, request_keys: int,
     }
 
 
-def run(out_dir: str = "benchmarks/results", backend=None):
+def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
+        autotune=None):
+    """Sweep the service.  ``spec`` pins ONE declarative IndexSpec for
+    every cell; ``autotune`` (a byte budget) lets the `spec.Tuner` pick
+    the per-dataset spec+backend instead of the serving defaults."""
+    from repro.serve.lookup import default_spec
+
     backend = backend or C.BACKEND
     rows = []
     for ds in DATASETS:
-        for index in INDEX_NAMES:
+        if spec is not None:
+            cells = [spec]
+        elif autotune is not None:
+            res = C.tuned_spec(ds, autotune, names=tuple(INDEX_NAMES),
+                               backends=("jnp", "pallas"))
+            cells = [res.spec]
+        else:
+            cells = [default_spec(i) for i in INDEX_NAMES]
+        for sp in cells:
+            be = sp.backend if (autotune is not None
+                                and spec is None) else backend
             for max_batch, request_keys in BATCH_POINTS:
-                r = _run_cell(ds, index, max_batch, request_keys,
-                              backend=backend)
+                r = _run_cell(ds, sp, max_batch, request_keys, backend=be)
                 rows.append(r)
-                print(f"{ds:5s} {index:12s} batch={max_batch:5d} "
+                print(f"{ds:5s} {r['index']:12s} batch={max_batch:5d} "
                       f"{r['lookups_per_s']/1e3:9.1f} klookups/s  "
                       f"p99={r['p99_batch_ms']:8.2f}ms  occ="
                       f"{r['mean_occupancy']:.2f}  "
@@ -127,4 +141,5 @@ def run(out_dir: str = "benchmarks/results", backend=None):
 
 
 if __name__ == "__main__":
-    run(backend=C.backend_arg())
+    _ns = C.bench_args()
+    run(backend=_ns.backend, spec=_ns.spec, autotune=_ns.autotune)

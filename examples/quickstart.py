@@ -1,12 +1,13 @@
-"""Quickstart: build learned indexes over a SOSD surrogate, look keys up,
-compare the Pareto points — the paper's core loop in ~40 lines.
+"""Quickstart: declare learned indexes as `IndexSpec`s over a SOSD
+surrogate, build + look keys up, compare the Pareto points — the
+paper's core loop in ~40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import base, validate
+from repro.core import spec, validate
 from repro.core.search import SEARCH_FNS
 from repro.data import sosd
 
@@ -15,16 +16,20 @@ keys = sosd.generate("amzn", N, seed=1)           # sorted uint64 keys
 q = sosd.make_queries(keys, 20_000, seed=2)       # mixed present/absent
 truth = np.searchsorted(keys, q)
 
+# Every build is a declarative, JSON-serializable spec (DESIGN.md §12):
+SPECS = [
+    '{"index": "rmi", "hyper": {"branching": 4096}}',
+    '{"index": "pgm", "hyper": {"eps": 64}}',
+    '{"index": "radix_spline", "hyper": {"eps": 32, "radix_bits": 16}}',
+    '{"index": "btree", "hyper": {"sample": 8}}',
+    '{"index": "rbs", "hyper": {"radix_bits": 16}}',
+    '{"index": "binary_search"}',
+]
+
 print(f"{'index':14s} {'size':>10s} {'log2(err)':>10s} {'exact':>6s}")
-for name, hyper in [
-    ("rmi", dict(branching=4096)),
-    ("pgm", dict(eps=64)),
-    ("radix_spline", dict(eps=32, radix_bits=16)),
-    ("btree", dict(sample=8)),
-    ("rbs", dict(radix_bits=16)),
-    ("binary_search", dict()),
-]:
-    index = base.REGISTRY[name](keys, **hyper)
+for text in SPECS:
+    s = spec.IndexSpec.from_json(text)            # validated before building
+    index = spec.build(s, keys)
 
     # 1) index inference: key -> search bound containing lower_bound(key)
     lo, hi = index.lookup(index.state, jnp.asarray(q))
@@ -35,8 +40,14 @@ for name, hyper in [
     exact = bool((np.asarray(pos) == truth).all())
 
     stats = validate.check_bounds(index, keys, q)
-    print(f"{name:14s} {index.size_bytes:>10,d} {stats['log2_err']:>10.2f} "
-          f"{str(exact):>6s}")
+    print(f"{index.name:14s} {index.size_bytes:>10,d} "
+          f"{stats['log2_err']:>10.2f} {str(exact):>6s}")
+
+# Or let the budget tuner choose the spec (and backend) per dataset:
+tuned = spec.Tuner(max_bytes=1 << 20, max_configs=3).tune(keys)
+print(f"\ntuned under 1MiB: {tuned.spec.to_json()} "
+      f"({tuned.build.size_bytes:,d} bytes, "
+      f"{len(tuned.evaluated)} configs searched)")
 
 print("\nEvery structure maps key -> (lo, hi) with lower_bound(key) inside "
       "(paper §2); smaller index => wider bound => longer last mile.")

@@ -12,6 +12,7 @@ import time
 import numpy as np
 
 from repro.core import base
+from repro.core.spec import IndexSpec
 from repro.data import sosd
 from repro.serve.lookup import LookupService, LookupServiceConfig
 
@@ -22,7 +23,7 @@ KEYS_PER_REQUEST = 64
 
 keys = sosd.generate("amzn", N_KEYS, seed=1)
 svc = LookupService(keys, LookupServiceConfig(
-    index="rmi", hyper=dict(branching=2048),
+    spec=IndexSpec("rmi", dict(branching=2048)),
     max_batch=1024, deadline_ms=1.0))
 
 errors = []

@@ -21,17 +21,22 @@ from repro.core.base import (  # noqa: E402
     register,
     get_index,
 )
+from repro.core import spec  # noqa: E402  (schemas register below)
 from repro.core import rmi, radix_spline, pgm, btree, rbs, hashmap  # noqa: E402,F401
 from repro.core import plan, search, validate, tuning, analysis  # noqa: E402,F401
 from repro.core.plan import LookupPlan, lower  # noqa: E402
+from repro.core.spec import IndexSpec, Tuner  # noqa: E402
 
 __all__ = [
     "IndexBuild",
+    "IndexSpec",
     "LookupPlan",
     "SearchBound",
+    "Tuner",
     "lower",
     "lower_bound_oracle",
     "REGISTRY",
     "register",
     "get_index",
+    "spec",
 ]

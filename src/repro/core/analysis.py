@@ -43,9 +43,12 @@ def describe(build: base.IndexBuild, widths: np.ndarray) -> Dict:
     elif name == "radix_spline":
         inference_bytes = 2 * 8 + 4 * 8
         flops = 10 + int(np.ceil(np.log2(build.meta.get("radix_max_gap", 2) + 2))) * 2
-    elif name == "btree":
+    elif name in ("btree", "ibtree"):
+        # identical node layout; ibtree's interpolation probe swaps the
+        # node-wide rank count for one multiply + the same node gather
         inference_bytes = levels * (h.get("fanout", 128) + 1) * 8
-        flops = levels * (h.get("fanout", 128) + 1)
+        flops = (levels * (h.get("fanout", 128) + 1) if name == "btree"
+                 else levels * 8)
     elif name == "rbs":
         inference_bytes = 2 * 8
         flops = 3
@@ -64,6 +67,22 @@ def describe(build: base.IndexBuild, widths: np.ndarray) -> Dict:
         "bytes_touched": bytes_touched,
         "flops": flops + last_mile_probes * 2,
     }
+
+
+#: Per-unit latency weights turning the §7 metrics into one scalar
+#: nanosecond PROXY (DESIGN.md §12.3): a dependent probe round costs a
+#: memory-latency-ish 30ns, a byte of traffic 0.25ns, a flop 0.5ns.
+#: The absolute scale is nominal — the tuner only ranks candidates and
+#: compares against a caller-chosen ``target_ns`` stated in the same
+#: units — but the RATIOS encode the paper's §4.3 finding that data
+#: movement dominates, instruction count least.
+COST_NS_WEIGHTS = {"probes": 30.0, "bytes_touched": 0.25, "flops": 0.5}
+
+
+def cost_ns(metrics: Dict) -> float:
+    """Scalar per-lookup latency proxy of one `describe()` record — the
+    objective `repro.core.spec.Tuner` minimizes / budgets against."""
+    return float(sum(w * metrics[k] for k, w in COST_NS_WEIGHTS.items()))
 
 
 def regress(records: List[Dict], y_key: str = "ns_per_lookup",

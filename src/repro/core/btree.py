@@ -15,7 +15,25 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import base
+from repro.core import base, spec
+
+_BTREE_FIELDS = [
+    spec.HyperField("sample", int, 1, lo=1, hi=1 << 20),
+    spec.HyperField("fanout", int, 128, lo=2, hi=4096),
+]
+
+spec.register_schema(
+    "btree",
+    fields=_BTREE_FIELDS,
+    # smallest -> largest size: coarser sampling = fewer stored keys
+    ladder=[dict(sample=s) for s in (1024, 256, 64, 32, 16, 8, 4, 2, 1)],
+)
+
+spec.register_schema(
+    "ibtree",
+    fields=_BTREE_FIELDS,
+    ladder=[dict(sample=s) for s in (256, 64, 16, 4, 1)],
+)
 
 
 @base.register("btree")

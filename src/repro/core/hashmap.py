@@ -14,7 +14,19 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import base
+from repro.core import base, spec
+
+spec.register_schema(
+    "robin_hash",
+    fields=[spec.HyperField("load_factor", float, 0.5, lo=0.05, hi=0.95)],
+    # smallest -> largest size: higher load factor = denser table
+    ladder=[dict(load_factor=f) for f in (0.8, 0.5, 0.25)],
+    sweep=False,
+    sweep_exclude_reason=(
+        "point-only: no lower-bound semantics, so it has no place on the "
+        "size x LB-latency Pareto sweep (paper §4.1.1); benchmarks time it "
+        "separately as the Table 2 hash companion"),
+)
 
 _MULT = np.uint64(0x9E3779B97F4A7C15)
 

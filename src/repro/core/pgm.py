@@ -24,7 +24,18 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import base, _pla, search
+from repro.core import base, _pla, search, spec
+
+spec.register_schema(
+    "pgm",
+    fields=[
+        spec.HyperField("eps", int, 64, lo=1, hi=1 << 20),
+        spec.HyperField("eps_internal", int, 8, lo=1, hi=1 << 20),
+        spec.HyperField("top_cutoff", int, 64, lo=1, hi=1 << 16),
+    ],
+    # smallest -> largest size: eps controls segment count inversely
+    ladder=[dict(eps=e) for e in (2048, 1024, 512, 256, 128, 64, 32, 16, 8)],
+)
 
 
 def _level_error(ax, ay, sl, xs, ys) -> int:

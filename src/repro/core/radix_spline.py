@@ -15,7 +15,19 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import base, _pla, search
+from repro.core import base, _pla, search, spec
+
+spec.register_schema(
+    "radix_spline",
+    fields=[
+        spec.HyperField("eps", int, 32, lo=1, hi=1 << 20),
+        spec.HyperField("radix_bits", int, 16, lo=1, hi=28),
+    ],
+    # smallest -> largest size: eps down (more knots) + radix bits up
+    ladder=[dict(eps=e, radix_bits=r)
+            for (e, r) in ((1024, 8), (512, 10), (256, 12), (128, 14),
+                           (64, 16), (32, 16), (16, 18), (8, 20))],
+)
 
 
 @base.register("radix_spline")

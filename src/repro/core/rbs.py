@@ -10,7 +10,20 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import base
+from repro.core import base, spec
+
+spec.register_schema(
+    "rbs",
+    fields=[spec.HyperField("radix_bits", int, 16, lo=1, hi=28)],
+    # smallest -> largest size: the table is 2^radix_bits entries
+    ladder=[dict(radix_bits=r) for r in (6, 8, 10, 12, 14, 16, 18, 20, 22)],
+)
+
+spec.register_schema(
+    "binary_search",
+    fields=[],
+    ladder=[dict()],
+)
 
 
 @base.register("rbs")

@@ -26,7 +26,23 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import base
+from repro.core import base, spec
+
+spec.register_schema(
+    "rmi",
+    fields=[
+        spec.HyperField("branching", int, 1024, lo=2, hi=2**22),
+        spec.HyperField("stage1", str, "linear",
+                        choices=("linear", "cubic", "minmax")),
+    ],
+    # CDFShop ladder, smallest -> largest size (size tracks branching;
+    # the cubic rungs slot in at their branching factor)
+    ladder=[dict(branching=2**6), dict(branching=2**8),
+            dict(branching=2**10), dict(branching=2**10, stage1="cubic"),
+            dict(branching=2**12), dict(branching=2**14),
+            dict(branching=2**14, stage1="cubic"),
+            dict(branching=2**16), dict(branching=2**18)],
+)
 
 
 def _fit_linear(u: np.ndarray, y: np.ndarray):

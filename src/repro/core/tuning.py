@@ -1,46 +1,57 @@
 """CDFShop-style configuration sweeps (paper §3.1 / §4.2).
 
-The paper tunes every structure across ~10 configurations from minimum to
-maximum size and reports the Pareto frontier.  ``LADDERS`` mirrors that: a
-size ladder per structure; ``sweep`` builds each rung and hands the builds to
-the caller (benchmarks attach timings, analysis attaches metrics).
+The paper tunes every structure across ~10 configurations from minimum
+to maximum size and reports the Pareto frontier.  Since the declarative
+build API landed (DESIGN.md §12), the size ladders are GENERATED from
+the per-index hyperparameter schemas (`repro.core.spec`) rather than
+hand-maintained here — `LADDERS` is a derived view kept for callers
+that think in hyper dicts, and `sweep` builds every rung through the
+one validated `spec.build` entry point.
+
+``max_configs`` caps a sweep by stride-sampling ACROSS each ladder
+(both size extremes always included) — the historical ``ladder[:k]``
+truncation only ever saw the small end, so capped sweeps never met the
+paper's "minimum to maximum size" protocol.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
 from repro.core import base
+from repro.core import spec as spec_mod
 
+#: Index names in the default sweep — generated from the schemas.
+#: `robin_hash` is schema-excluded with a reason (point-only, no LB);
+#: everything else in `base.REGISTRY`, including `ibtree`, sweeps.
+DEFAULT_SWEEP = spec_mod.sweep_names()
+
+#: Derived hyper-dict view of the schema ladders (back-compat surface;
+#: the source of truth is `spec.SCHEMAS[name].ladder`).
 LADDERS: Dict[str, List[dict]] = {
-    "rmi": [dict(branching=b, stage1=s1)
-            for b in (2**6, 2**8, 2**10, 2**12, 2**14, 2**16, 2**18)
-            for s1 in ("linear",)]
-    + [dict(branching=2**10, stage1="cubic"), dict(branching=2**14, stage1="cubic")],
-    "pgm": [dict(eps=e) for e in (8, 16, 32, 64, 128, 256, 512, 1024, 2048)],
-    "radix_spline": [dict(eps=e, radix_bits=r)
-                     for (e, r) in ((8, 20), (16, 18), (32, 16), (64, 16),
-                                    (128, 14), (256, 12), (512, 10), (1024, 8))],
-    "btree": [dict(sample=s) for s in (1, 2, 4, 8, 16, 32, 64, 256, 1024)],
-    "ibtree": [dict(sample=s) for s in (1, 4, 16, 64, 256)],
-    "rbs": [dict(radix_bits=r) for r in (6, 8, 10, 12, 14, 16, 18, 20, 22)],
-    "binary_search": [dict()],
-    "robin_hash": [dict(load_factor=f) for f in (0.25, 0.5, 0.8)],
+    name: [dict(rung) for rung in schema.ladder]
+    for name, schema in spec_mod.SCHEMAS.items()
 }
+
+
+def spec_sweep(names: Optional[Iterable[str]] = None,
+               max_configs: Optional[int] = None,
+               backend: str = "jnp") -> List[spec_mod.IndexSpec]:
+    """The sweep as validated `IndexSpec`s (no builds), smallest to
+    largest per index, stride-sampled to ``max_configs`` rungs."""
+    out: List[spec_mod.IndexSpec] = []
+    for name in (DEFAULT_SWEEP if names is None else names):
+        out.extend(spec_mod.spec_ladder(name, max_configs=max_configs,
+                                        backend=backend))
+    return out
 
 
 def sweep(
     keys: np.ndarray,
-    names: Iterable[str] = ("rmi", "pgm", "radix_spline", "btree", "rbs",
-                            "binary_search"),
-    max_configs: int | None = None,
+    names: Optional[Iterable[str]] = None,
+    max_configs: Optional[int] = None,
 ) -> List[base.IndexBuild]:
-    builds = []
-    for name in names:
-        rungs = LADDERS[name]
-        if max_configs:
-            rungs = rungs[:max_configs]
-        for hyper in rungs:
-            builds.append(base.REGISTRY[name](keys, **hyper))
-    return builds
+    """Build every (stride-sampled) rung of every ladder via specs."""
+    return [spec_mod.build(s, keys)
+            for s in spec_sweep(names, max_configs=max_configs)]

@@ -48,15 +48,19 @@ def run_tokens(args):
 
 def run_lookup(args):
     from repro.core import base
+    from repro.core.spec import IndexSpec
     from repro.data import sosd
-    from repro.serve.lookup import (DEFAULT_HYPER, LookupService,
-                                    LookupServiceConfig)
+    from repro.serve.lookup import (LookupService, LookupServiceConfig,
+                                    default_spec)
 
     keys = sosd.generate(args.dataset, args.n_keys, seed=1)
-    hyper = DEFAULT_HYPER.get(args.index, {})
+    # --spec takes one declarative IndexSpec (JSON) over the index name
+    sp = (IndexSpec.from_json(args.spec) if args.spec
+          else default_spec(args.index))
     svc = LookupService(keys, LookupServiceConfig(
-        index=args.index, hyper=hyper, max_batch=args.max_batch,
+        spec=sp, max_batch=args.max_batch,
         deadline_ms=args.deadline_ms))
+    print(f"serving spec: {svc.generation.spec.to_json()}")
     q = sosd.make_queries(keys, args.requests * args.keys_per_request, seed=2)
 
     t0 = time.time()
@@ -95,6 +99,9 @@ def main():
     ap.add_argument("--dataset", default="amzn",
                     choices=sorted(("amzn", "face", "osm", "wiki")))
     ap.add_argument("--index", default="rmi")
+    ap.add_argument("--spec", default=None,
+                    help="IndexSpec JSON (overrides --index), e.g. "
+                         '\'{"index": "pgm", "hyper": {"eps": 32}}\'')
     ap.add_argument("--n-keys", type=int, default=200_000)
     ap.add_argument("--keys-per-request", type=int, default=64)
     ap.add_argument("--deadline-ms", type=float, default=2.0)

@@ -14,15 +14,24 @@ position the read path returns is identical to a lookup over the fully
 merged sorted array (the invariant `tests/test_workloads_mutable.py`
 pins against `oracle_replay` for every LB-capable index type x dataset).
 
+Construction is declarative (DESIGN.md §12): the index is addressed by
+an `IndexSpec` (pass one directly, or the legacy index/hyper/backend
+arguments are folded into one), every build runs through `spec.build`,
+and an optional `Tuner` makes compaction ADAPTIVE — each fold re-runs
+the budget search against the delta-merged key set, so the spec (and
+backend) can change when the data distribution does (the ROADMAP's
+delta-aware retuning item).
+
 Concurrency model (DESIGN.md §10.3): the only mutable cell is one
 `MutableView` pointer.  Inserts and compaction-publish replace it under
 a mutation lock; readers grab the current view with one lock-free-ish
 read and keep a fully consistent (generation, delta) PAIR for the whole
 batch — swapping either half atomically with the other is exactly what
 prevents double counting when a compaction folds delta keys into a new
-base.  Compaction itself (merge + rebuild) runs outside every lock and
-publishes through `IndexRegistry.build_and_publish`, the serving
-registry's atomic hot-swap.
+base.  Compaction itself (merge + rebuild, plus the optional retune)
+runs outside every lock and publishes through
+`IndexRegistry.build_and_publish` / `publish`, the serving registry's
+atomic hot-swap.
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
+from repro.core import spec as spec_mod
 from repro.mutable.delta import PAD_QUANTUM, DeltaBuffer
 from repro.serve.lookup.registry import (DEFAULT_NAME, Generation,
                                          IndexRegistry)
@@ -93,13 +103,17 @@ class MutableIndex:
                  compact_threshold: int = 4096,
                  registry: Optional[IndexRegistry] = None,
                  name: str = DEFAULT_NAME,
-                 pad_quantum: int = PAD_QUANTUM):
+                 pad_quantum: int = PAD_QUANTUM,
+                 spec: Optional[spec_mod.IndexSpec] = None,
+                 tuner: Optional[spec_mod.Tuner] = None):
         if compact_threshold < 1:
             raise ValueError("compact_threshold must be >= 1")
-        self.index = index
-        self.hyper = dict(hyper or {})
-        self.last_mile = last_mile
-        self.backend = backend
+        if spec is not None:
+            self.spec = spec_mod.coerce(spec, hyper)   # spec wins wholesale
+        else:
+            self.spec = spec_mod.coerce(index, hyper, backend=backend,
+                                        last_mile=last_mile)
+        self.tuner = tuner
         self.compact_threshold = int(compact_threshold)
         self.registry = registry if registry is not None else IndexRegistry()
         self.name = name
@@ -109,12 +123,28 @@ class MutableIndex:
         self._view: Optional[MutableView] = None
         self.reset(keys)
 
+    # -- spec-derived views (kept in sync across retunes) -----------------
+    @property
+    def index(self) -> str:
+        return self.spec.index
+
+    @property
+    def hyper(self) -> Dict[str, Any]:
+        return dict(self.spec.hyper)
+
+    @property
+    def last_mile(self) -> Optional[str]:
+        return self.spec.last_mile
+
+    @property
+    def backend(self) -> str:
+        return self.spec.backend
+
     # -- lifecycle -------------------------------------------------------
     def _publish_base(self, keys: np.ndarray) -> MutableView:
         keys = np.asarray(keys, dtype=np.uint64)
-        gen = self.registry.build_and_publish(
-            self.index, keys, hyper=self.hyper, name=self.name,
-            last_mile=self.last_mile, backend=self.backend)
+        gen = self.registry.build_and_publish(self.spec, keys,
+                                              name=self.name)
         return MutableView(generation=gen, base_np=keys,
                            delta=DeltaBuffer.empty(self.pad_quantum),
                            merged_fn=make_merged_fn(gen.plan, self.backend))
@@ -161,20 +191,25 @@ class MutableIndex:
     def compact(self) -> Optional[Generation]:
         """Fold the current delta into a fresh base generation.
 
-        Snapshot -> merge -> rebuild -> hot-swap publish.  The rebuild
-        (seconds of host numpy) runs outside every lock; the publish +
-        pointer swap hold the mutation lock and are cheap, so inserts
-        admitted DURING the rebuild are preserved: the new view keeps
-        exactly the keys the snapshot did not cover.  If a `reset`
-        replaced the whole key set mid-rebuild, the snapshot's
-        generation is no longer current and the rebuild is DISCARDED —
-        publishing it would resurrect the discarded key set.  Returns
-        the new generation, or None if the delta was empty or the
-        rebuild was abandoned.
+        Snapshot -> merge -> (retune) -> rebuild -> hot-swap publish.
+        With a `Tuner` configured, the rebuild's spec is CHOSEN against
+        the delta-merged key set (DESIGN.md §12.4) — the budget search
+        runs where the rebuild cost is already being paid, so a drifted
+        key distribution gets a freshly-tuned spec+backend and the
+        chosen build is published as-is (tuned builds are bit-identical
+        to direct builds of the same spec, so results cannot move).
+
+        The rebuild (seconds of host numpy) runs outside every lock;
+        the publish + pointer swap hold the mutation lock and are
+        cheap, so inserts admitted DURING the rebuild are preserved:
+        the new view keeps exactly the keys the snapshot did not cover.
+        If a `reset` replaced the whole key set mid-rebuild, the
+        snapshot's generation is no longer current and the rebuild is
+        DISCARDED — publishing it would resurrect the discarded key
+        set.  Returns the new generation, or None if the delta was
+        empty or the rebuild was abandoned.
         """
         import jax.numpy as jnp
-
-        from repro.core import base
 
         with self._compact_mu:
             snap = self.view()
@@ -182,16 +217,34 @@ class MutableIndex:
                 return None
             merged_keys = np.concatenate([snap.base_np, snap.delta.keys_np])
             merged_keys.sort(kind="stable")
-            build = base.REGISTRY[self.index](merged_keys, **self.hyper)
+            if self.tuner is not None:
+                result = self.tuner.tune(merged_keys)
+                new_spec, build = result.spec, result.build
+                # the tuner decides what it was ASKED to decide: with a
+                # single candidate backend it performed no backend
+                # selection, so the index's serving backend survives the
+                # retune; an unset last-mile likewise stays configured
+                if len(self.tuner.backends) == 1:
+                    new_spec = new_spec.replace(backend=self.spec.backend)
+                if new_spec.last_mile is None and \
+                        self.spec.last_mile is not None:
+                    new_spec = new_spec.replace(
+                        last_mile=self.spec.last_mile)
+                build.meta["spec"] = new_spec
+            else:
+                new_spec = self.spec
+                build = spec_mod.build(new_spec, merged_keys)
             data = jnp.asarray(merged_keys)
             with self._mu:
                 if self._view.generation is not snap.generation:
                     return None   # reset() raced the rebuild: stale, drop it
                 gen = self.registry.publish(build, data, name=self.name,
-                                            last_mile=self.last_mile,
-                                            backend=self.backend)
+                                            last_mile=new_spec.last_mile,
+                                            backend=new_spec.backend,
+                                            spec=new_spec)
+                self.spec = new_spec
                 leftover = self._view.delta.minus(snap.delta)
                 self._view = MutableView(
                     generation=gen, base_np=merged_keys, delta=leftover,
-                    merged_fn=make_merged_fn(gen.plan, self.backend))
+                    merged_fn=make_merged_fn(gen.plan, new_spec.backend))
             return gen

@@ -17,10 +17,11 @@ from repro.serve.lookup.mutable_service import (MutableLookupService,
                                                 MutableLookupServiceConfig)
 from repro.serve.lookup.registry import Generation, IndexRegistry
 from repro.serve.lookup.service import (DEFAULT_HYPER, LookupService,
-                                        LookupServiceConfig)
+                                        LookupServiceConfig, default_spec)
 
 __all__ = [
     "DEFAULT_HYPER",
+    "default_spec",
     "ClientBacklogFull",
     "LookupFuture",
     "MicroBatcher",

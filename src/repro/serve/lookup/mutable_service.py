@@ -28,6 +28,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import spec as spec_mod
 from repro.serve.lookup.admission import LookupFuture
 from repro.serve.lookup.registry import DEFAULT_NAME, Generation
 from repro.serve.lookup.service import LookupService, LookupServiceConfig
@@ -39,6 +40,11 @@ __all__ = ["MutableLookupService", "MutableLookupServiceConfig"]
 class MutableLookupServiceConfig(LookupServiceConfig):
     compact_threshold: int = 4096   # delta keys that trigger a compaction
     auto_compact: bool = True       # spawn the background compactor
+    #: Optional budget tuner (DESIGN.md §12.4): when set, every
+    #: compaction re-runs the spec search against the delta-merged key
+    #: set — the rebuilt generation's spec (and backend) follow the
+    #: data instead of staying pinned to the construction-time choice.
+    tuner: Optional[spec_mod.Tuner] = None
 
 
 class MutableLookupService(LookupService):
@@ -66,8 +72,8 @@ class MutableLookupService(LookupService):
 
         if self.mindex is None:
             self.mindex = MutableIndex(
-                keys, index=self.cfg.index, hyper=self.cfg.hyper,
-                last_mile=self.cfg.last_mile, backend=self.cfg.backend,
+                keys, spec=self.cfg.resolved_spec(),
+                tuner=self.cfg.tuner,
                 compact_threshold=self.cfg.compact_threshold,
                 registry=self.registry, name=DEFAULT_NAME,
                 pad_quantum=self.cfg.pad_quantum)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import base
+from repro.core import spec as spec_mod
 from repro.core.plan import LookupPlan
 from repro.serve.common import MonotonicCounter
 from repro.serve.lookup.dispatch import make_plan
@@ -45,6 +46,12 @@ class Generation:
     fn: Callable              # plan-compiled lookup: queries -> positions
     n_keys: int
     backend: str = "jnp"      # plan backend this generation serves with
+    #: The validated `IndexSpec` this generation was built from — the
+    #: serializable address of the serving unit (hot-swap, sharded
+    #: dispatch, and the services are spec-addressable through it).
+    #: `spec.backend`/`spec.last_mile` always reflect what the
+    #: generation actually serves with.
+    spec: Optional[spec_mod.IndexSpec] = None
 
     def scan_fn(self, m: int) -> Callable:
         """Plan-compiled scan (positions + m-record window), cached on
@@ -68,10 +75,19 @@ class IndexRegistry:
     def publish(self, build: base.IndexBuild, data,
                 name: str = DEFAULT_NAME,
                 last_mile: Optional[str] = None,
-                backend: str = "jnp") -> Generation:
+                backend: str = "jnp",
+                spec: Optional[spec_mod.IndexSpec] = None) -> Generation:
         """Lower a COMPLETE IndexBuild to its plan, wrap it into a
-        generation, and swap it in."""
+        generation, and swap it in.  ``spec`` defaults to the spec the
+        build carries (`spec.build` stamps it into ``meta``) and is
+        re-aligned to the backend/last-mile the generation serves with."""
         plan = make_plan(build, data, last_mile=last_mile)
+        if spec is None:
+            spec = build.meta.get("spec")
+        if spec is not None:
+            spec = spec.replace(backend=backend,
+                                last_mile=last_mile if last_mile is not None
+                                else spec.last_mile)
         gen = Generation(
             version=self._versions.next(),
             build=build,
@@ -80,20 +96,30 @@ class IndexRegistry:
             fn=plan.compile(backend=backend),
             n_keys=int(data.shape[0]),
             backend=backend,
+            spec=spec,
         )
         with self._lock:
             self._current[name] = gen
         return gen
 
-    def build_and_publish(self, index: str, keys: np.ndarray,
+    def build_and_publish(self, index, keys: np.ndarray,
                           hyper: Optional[Dict[str, Any]] = None,
                           name: str = DEFAULT_NAME,
                           last_mile: Optional[str] = None,
-                          backend: str = "jnp") -> Generation:
+                          backend: Optional[str] = None) -> Generation:
         """Rebuild on a fresh key set, then swap — build is outside the
-        lock, the swap is one pointer assignment."""
+        lock, the swap is one pointer assignment.
+
+        ``index`` is an `IndexSpec` (the declarative path — DESIGN.md
+        §12; ``hyper`` must then be None and explicit ``last_mile``/
+        ``backend`` args override the spec's) or a registry name with a
+        ``hyper`` dict (legacy callers), which is folded into a
+        validated spec so every build runs through `spec.build`.
+        """
+        sp = spec_mod.coerce(index, hyper, backend=backend,
+                             last_mile=last_mile)
         keys = np.asarray(keys, dtype=np.uint64)
-        build = base.REGISTRY[index](keys, **(hyper or {}))
+        build = spec_mod.build(sp, keys)
         data = jnp.asarray(keys)
-        return self.publish(build, data, name=name, last_mile=last_mile,
-                            backend=backend)
+        return self.publish(build, data, name=name, last_mile=sp.last_mile,
+                            backend=sp.backend, spec=sp)

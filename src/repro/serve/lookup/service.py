@@ -25,6 +25,7 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro.core import spec as spec_mod
 from repro.serve.common import MonotonicCounter
 from repro.serve.lookup.admission import LookupFuture, MicroBatcher
 from repro.serve.lookup.dispatch import PAD_QUANTUM, ShardedDispatcher
@@ -42,6 +43,12 @@ DEFAULT_HYPER = {
 }
 
 
+def default_spec(index: str, backend: str = "jnp") -> spec_mod.IndexSpec:
+    """The serving-default `IndexSpec` for one index family."""
+    return spec_mod.IndexSpec(index, dict(DEFAULT_HYPER.get(index, {})),
+                              backend=backend).validated()
+
+
 @dataclasses.dataclass(frozen=True)
 class LookupServiceConfig:
     index: str = "rmi"                 # repro.core.base.REGISTRY name
@@ -54,6 +61,18 @@ class LookupServiceConfig:
     max_client_keys: Optional[int] = None   # per-client pending-key cap
     client_rate: Optional[tuple] = None     # per-client (rate keys/s, burst)
     max_scan_length: int = 4096             # per-request scan-window cap
+    #: Declarative alternative to index/hyper/backend/last_mile: when
+    #: set, the spec wins WHOLESALE (the four field-wise knobs are
+    #: ignored) — one serializable value addresses the whole build.
+    spec: Optional[spec_mod.IndexSpec] = None
+
+    def resolved_spec(self) -> spec_mod.IndexSpec:
+        """The validated `IndexSpec` every build of this service uses."""
+        if self.spec is not None:
+            return self.spec.validated()
+        return spec_mod.coerce(self.index, self.hyper,
+                               backend=self.backend,
+                               last_mile=self.last_mile)
 
 
 class LookupService:
@@ -77,10 +96,11 @@ class LookupService:
 
     # -- index lifecycle -------------------------------------------------
     def swap_keys(self, keys: np.ndarray) -> Generation:
-        """Rebuild on a fresh key set and hot-swap it in (no draining)."""
+        """Rebuild on a fresh key set and hot-swap it in (no draining).
+        Builds go through the config's resolved `IndexSpec`, so the
+        published generation is spec-addressable (`Generation.spec`)."""
         return self.registry.build_and_publish(
-            self.cfg.index, keys, hyper=self.cfg.hyper,
-            last_mile=self.cfg.last_mile, backend=self.cfg.backend)
+            self.cfg.resolved_spec(), keys)
 
     @property
     def generation(self) -> Generation:
@@ -114,7 +134,8 @@ class LookupService:
         # hot-swap to a point-only index lands after admission
         if self.generation.plan.point_only:
             raise ValueError(
-                f"index {self.cfg.index!r} is point-only: no scans")
+                f"index {self.generation.plan.name!r} is point-only: "
+                "no scans")
         _, fut = self.batcher.submit(keys, kind="scan", aux=int(length),
                                      client=client)
         return fut

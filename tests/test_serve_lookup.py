@@ -9,7 +9,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import base, search
+from repro.core import base, search, spec
 from repro.data import sosd
 from repro.serve.common import MonotonicCounter
 from repro.serve.lookup import (ClientBacklogFull, IndexRegistry,
@@ -286,6 +286,10 @@ def test_registry_swap_is_atomic_never_half_built():
         assert release.wait(10.0)            # hold the build "half done"
         return base.REGISTRY["rmi"](keys, **hyper)
 
+    # builds go through the spec entry point now: the injected index
+    # needs a schema too (rmi's fields fit — the slow build delegates)
+    spec.register_schema("_test_slow_rmi",
+                         fields=spec.SCHEMAS["rmi"].fields, ladder=[dict()])
     try:
         t = threading.Thread(target=reg.build_and_publish, args=(
             "_test_slow_rmi", keys_new), kwargs=dict(hyper=dict(branching=256)))
@@ -305,6 +309,7 @@ def test_registry_swap_is_atomic_never_half_built():
     finally:
         release.set()
         base.REGISTRY.pop("_test_slow_rmi", None)
+        spec.SCHEMAS.pop("_test_slow_rmi", None)
 
 
 def test_service_hot_swap_under_load():

@@ -1,0 +1,421 @@
+"""The declarative build API + budget tuner (DESIGN.md §12).
+
+Pins the acceptance contract of the spec layer: specs validate before
+building and build BIT-IDENTICAL to the equivalent direct call, the
+schema registry and `base.REGISTRY` can never drift apart, capped
+sweeps always see both size extremes, `Generation.spec` survives the
+service layer (hot-swap + sharded dispatch) with its backend intact,
+the tuner's byte budget is hard, and compaction retunes against the
+delta-merged key set.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import functools
+import inspect
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data import sosd
+from repro.core import base, spec, tuning
+
+N_KEYS, N_Q = 8_000, 512
+
+#: One mid-ladder rung per index for the bit-identity matrix.
+DIRECT_CELLS = [
+    ("rmi", dict(branching=512, stage1="linear")),
+    ("pgm", dict(eps=32)),
+    ("radix_spline", dict(eps=16, radix_bits=12)),
+    ("btree", dict(sample=8)),
+    ("ibtree", dict(sample=16)),
+    ("rbs", dict(radix_bits=12)),
+    ("binary_search", {}),
+    ("robin_hash", dict(load_factor=0.5)),
+]
+
+
+@functools.lru_cache(maxsize=None)
+def _cell(ds: str = "amzn"):
+    keys = sosd.generate(ds, N_KEYS, seed=3)
+    q = sosd.make_queries(keys, N_Q, seed=5, present_frac=0.7)
+    return keys, q, np.searchsorted(keys, q)
+
+
+# ---------------------------------------------------------------------------
+# IndexSpec: serialization + validation
+# ---------------------------------------------------------------------------
+def test_json_roundtrip():
+    specs = [
+        spec.IndexSpec("rmi", dict(branching=512)),
+        spec.IndexSpec("pgm", dict(eps=32), backend="pallas"),
+        spec.IndexSpec("btree", dict(sample=4), last_mile="interpolation"),
+        spec.IndexSpec("binary_search"),
+    ]
+    for s in specs:
+        assert spec.IndexSpec.from_json(s.to_json()) == s
+        v = s.validated()
+        assert v.validated() == v                  # idempotent
+        assert spec.IndexSpec.from_json(v.to_json()) == v
+        assert v.backend == s.backend and v.last_mile == s.last_mile
+    # JSON is plain data: no surprises for an external caller
+    d = json.loads(specs[1].to_json())
+    assert d == {"index": "pgm", "hyper": {"eps": 32}, "backend": "pallas"}
+
+
+def test_from_dict_rejects_unknown_keys():
+    with pytest.raises(spec.SpecError):
+        spec.IndexSpec.from_dict({"index": "rmi", "hyperr": {}})
+    with pytest.raises(spec.SpecError):
+        spec.IndexSpec.from_dict({"hyper": {}})
+
+
+@pytest.mark.parametrize("bad", [
+    spec.IndexSpec("no_such_index"),
+    spec.IndexSpec("rmi", dict(branchingg=512)),          # unknown field
+    spec.IndexSpec("rmi", dict(branching="big")),         # wrong type
+    spec.IndexSpec("rmi", dict(branching=True)),          # bool is not int
+    spec.IndexSpec("rmi", dict(branching=1)),             # below min
+    spec.IndexSpec("rmi", dict(stage1="quartic")),        # not a choice
+    spec.IndexSpec("rbs", dict(radix_bits=64)),           # above max
+    spec.IndexSpec("robin_hash", dict(load_factor=2.0)),  # above max
+    spec.IndexSpec("rmi", backend="tpu_v9"),
+    spec.IndexSpec("rmi", last_mile="quantum"),
+], ids=["index", "field", "type", "bool", "min", "choice", "max",
+        "float-max", "backend", "last-mile"])
+def test_validation_rejects(bad):
+    with pytest.raises(spec.SpecError):
+        bad.validated()
+    with pytest.raises(spec.SpecError):
+        spec.build(bad, _cell()[0])   # build validates BEFORE building
+
+
+def test_coerce_folds_legacy_and_rejects_mixed():
+    sp = spec.coerce("rmi", dict(branching=256), backend="pallas")
+    assert sp == spec.IndexSpec("rmi", dict(branching=256),
+                                backend="pallas").validated()
+    assert spec.coerce(sp) == sp
+    with pytest.raises(TypeError):
+        spec.coerce(spec.IndexSpec("rmi"), dict(branching=256))
+
+
+def test_validated_fills_defaults():
+    v = spec.IndexSpec("rmi", dict(branching=256)).validated()
+    assert v.hyper == dict(branching=256, stage1="linear")
+    assert spec.IndexSpec("binary_search").validated().hyper == {}
+
+
+# ---------------------------------------------------------------------------
+# The build entry point: bit-identical to direct builds
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,hyper", DIRECT_CELLS,
+                         ids=[n for n, _ in DIRECT_CELLS])
+def test_spec_build_bit_identical_to_direct(name, hyper):
+    keys, q, _ = _cell()
+    via_spec = spec.build(spec.IndexSpec(name, hyper), keys)
+    direct = base.REGISTRY[name](keys, **hyper)
+    assert via_spec.name == direct.name
+    assert via_spec.size_bytes == direct.size_bytes
+    ls, ld = (jax.tree_util.tree_leaves(via_spec.state),
+              jax.tree_util.tree_leaves(direct.state))
+    assert len(ls) == len(ld)
+    for a, b in zip(ls, ld):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    qj = jnp.asarray(q)
+    outs = via_spec.lookup(via_spec.state, qj)
+    outd = direct.lookup(direct.state, qj)
+    for a, b in zip(outs, outd):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the spec rides along on the build
+    assert via_spec.meta["spec"].index == name
+
+
+# ---------------------------------------------------------------------------
+# Registry <-> schema consistency (satellite: nothing can drift)
+# ---------------------------------------------------------------------------
+def test_registry_schema_consistency():
+    assert set(spec.SCHEMAS) == set(base.REGISTRY), (
+        "every base.REGISTRY index needs a spec schema and vice versa")
+    swept = set(spec.sweep_names())
+    for name, schema in spec.SCHEMAS.items():
+        assert len(schema.ladder) >= 1, f"{name}: empty ladder"
+        # every rung must be a valid (partial) spec
+        for rung in schema.ladder:
+            spec.IndexSpec(name, dict(rung)).validated()
+        if name in swept:
+            assert schema.sweep and not schema.sweep_exclude_reason
+        else:
+            assert schema.sweep_exclude_reason, (
+                f"{name} is excluded from the default sweep without a "
+                "stated reason")
+    # the historically-missing names are now resolved explicitly:
+    assert "ibtree" in swept
+    assert "robin_hash" not in swept
+    assert "point-only" in spec.SCHEMAS["robin_hash"].sweep_exclude_reason
+    # the derived LADDERS view matches the schemas
+    assert set(tuning.LADDERS) == set(spec.SCHEMAS)
+    for name in spec.SCHEMAS:
+        assert tuning.LADDERS[name] == [dict(r) for r in
+                                        spec.SCHEMAS[name].ladder]
+    # the spec layer's backend axis must track the plan IR's
+    from repro.core import plan
+    assert spec.BACKENDS == plan.BACKENDS
+
+
+def test_schema_defaults_match_builder_signatures():
+    """A schema default drifting from the builder's signature default
+    would make `validated()` change build results — forbid it."""
+    for name, schema in spec.SCHEMAS.items():
+        sig = inspect.signature(base.REGISTRY[name])
+        for f in schema.fields:
+            p = sig.parameters.get(f.name)
+            assert p is not None, f"{name}.{f.name}: not a builder kwarg"
+            assert p.default == f.default, (
+                f"{name}.{f.name}: schema default {f.default!r} != "
+                f"builder default {p.default!r}")
+
+
+# ---------------------------------------------------------------------------
+# Capped sweeps: stride sampling keeps both size extremes (satellite)
+# ---------------------------------------------------------------------------
+def test_stride_sample_includes_both_ends():
+    seq = list(range(9))
+    assert spec.stride_sample(seq, 3) == [0, 4, 8]
+    assert spec.stride_sample(seq, 2) == [0, 8]
+    assert spec.stride_sample(seq, 9) == seq
+    assert spec.stride_sample(seq, None) == seq
+    out = spec.stride_sample(seq, 5)
+    assert out[0] == 0 and out[-1] == 8 and len(out) == 5
+
+
+@pytest.mark.parametrize("name", ("pgm", "btree", "rmi"))
+def test_capped_sweep_sees_min_and_max_sizes(name):
+    keys, _, _ = _cell()
+    full = [b.size_bytes for b in tuning.sweep(keys, names=(name,))]
+    capped = [b.size_bytes
+              for b in tuning.sweep(keys, names=(name,), max_configs=3)]
+    assert len(capped) == 3
+    # the ladder-ordering contract: rungs run smallest -> largest size
+    assert full[0] == min(full) and full[-1] == max(full)
+    # the fix: a capped sweep still spans the whole size range
+    assert min(capped) == min(full) and max(capped) == max(full)
+
+
+# ---------------------------------------------------------------------------
+# Tuner: hard byte budget, target_ns, backend measurement
+# ---------------------------------------------------------------------------
+def test_tuner_respects_hard_byte_budget():
+    keys, q, lb = _cell()
+    budget = 20_000
+    res = spec.Tuner(names=("rmi", "pgm"), max_bytes=budget,
+                     max_configs=4).tune(keys)
+    assert res.build.size_bytes <= budget
+    assert any(c.size_bytes > budget for c in res.evaluated), (
+        "search space should include over-budget rungs it then discards")
+    # the tuned build is bit-identical to a direct build of the spec
+    direct = spec.build(res.spec, keys)
+    assert direct.size_bytes == res.build.size_bytes
+    qj = jnp.asarray(q)
+    lo1, hi1 = res.build.lookup(res.build.state, qj)
+    lo2, hi2 = direct.lookup(direct.state, qj)
+    np.testing.assert_array_equal(np.asarray(lo1), np.asarray(lo2))
+    np.testing.assert_array_equal(np.asarray(hi1), np.asarray(hi2))
+
+
+def test_tuner_budget_impossible_raises():
+    keys, _, _ = _cell()
+    with pytest.raises(spec.BudgetError):
+        spec.Tuner(names=("rmi",), max_bytes=8, max_configs=2).tune(keys)
+
+
+def test_tuner_target_ns_picks_smallest_fast_enough():
+    keys, _, _ = _cell()
+    t = spec.Tuner(names=("rmi", "pgm"), target_ns=1e12, max_configs=4)
+    res = t.tune(keys)
+    # with an unreachable-high target, EVERY candidate qualifies, so the
+    # smallest index must win
+    assert res.build.size_bytes == min(c.size_bytes for c in res.evaluated)
+    # monotonicity: loosening the byte budget can only speed up the pick
+    tight = spec.Tuner(names=("rmi", "pgm"), max_bytes=20_000,
+                       max_configs=4).tune(keys)
+    loose = spec.Tuner(names=("rmi", "pgm"), max_bytes=1 << 24,
+                       max_configs=4).tune(keys)
+    tight_c = min(c.cost_ns for c in tight.evaluated
+                  if c.size_bytes <= 20_000)
+    loose_c = min(c.cost_ns for c in loose.evaluated)
+    assert loose_c <= tight_c
+
+
+def test_tuner_measures_and_selects_backend():
+    keys, q, lb = _cell()
+    res = spec.Tuner(names=("rmi",), backends=("jnp", "pallas"),
+                     max_configs=2, n_queries=256).tune(keys)
+    assert set(res.backend_ns) == {"jnp", "pallas"}
+    assert res.spec.backend == min(res.backend_ns, key=res.backend_ns.get)
+    # whichever backend won, the tuned spec still serves exact LB ranks
+    from repro.core import plan
+    fn = plan.lower(res.build, jnp.asarray(keys)).compile(
+        backend=res.spec.backend)
+    np.testing.assert_array_equal(np.asarray(fn(jnp.asarray(q))), lb)
+
+
+def test_tuner_rejects_point_only_names():
+    keys, _, _ = _cell()
+    with pytest.raises(spec.SpecError):
+        spec.Tuner(names=("robin_hash",)).tune(keys)
+
+
+# ---------------------------------------------------------------------------
+# Spec round-trip through the service layer (satellite)
+# ---------------------------------------------------------------------------
+def test_generation_spec_survives_publish_and_hot_swap():
+    from repro.serve.lookup import IndexRegistry
+    from repro.serve.lookup.dispatch import ShardedDispatcher
+
+    keys, q, lb = _cell()
+    reg = IndexRegistry()
+    sp = spec.IndexSpec("rmi", dict(branching=512), backend="pallas")
+    gen = reg.build_and_publish(sp, keys)
+    assert gen.backend == "pallas"
+    assert gen.spec == sp.validated()
+    # JSON round-trip of the published spec rebuilds bit-identically
+    re_sp = spec.IndexSpec.from_json(gen.spec.to_json())
+    re_gen = reg.build_and_publish(re_sp, keys, name="rebuilt")
+    np.testing.assert_array_equal(
+        np.asarray(gen.fn(jnp.asarray(q))),
+        np.asarray(re_gen.fn(jnp.asarray(q))))
+    # hot-swap: a new spec published under the same name replaces it
+    sp2 = spec.IndexSpec("pgm", dict(eps=32))
+    gen2 = reg.build_and_publish(sp2, keys)
+    assert reg.current().spec == sp2.validated()
+    assert reg.current().spec.backend == "jnp"
+    # the sharded dispatcher serves the generation's plan on its backend
+    disp = ShardedDispatcher()
+    np.testing.assert_array_equal(disp(gen.plan, q, backend=gen.backend), lb)
+    np.testing.assert_array_equal(disp(gen2.plan, q, backend=gen2.backend),
+                                  lb)
+
+
+def test_legacy_string_publish_still_carries_spec():
+    from repro.serve.lookup import IndexRegistry
+
+    keys, q, lb = _cell()
+    gen = IndexRegistry().build_and_publish(
+        "radix_spline", keys, hyper=dict(eps=16, radix_bits=12))
+    assert gen.spec is not None
+    assert gen.spec.index == "radix_spline"
+    assert gen.spec.hyper["eps"] == 16
+    np.testing.assert_array_equal(np.asarray(gen.fn(jnp.asarray(q))), lb)
+
+
+def test_service_config_spec_roundtrip():
+    from repro.serve.lookup import (LookupService, LookupServiceConfig,
+                                    MutableLookupService,
+                                    MutableLookupServiceConfig)
+
+    keys, q, lb = _cell()
+    sp = spec.IndexSpec("rmi", dict(branching=512), backend="pallas")
+    svc = LookupService(keys, LookupServiceConfig(spec=sp, max_batch=256))
+    assert svc.generation.spec == sp.validated()
+    assert svc.generation.backend == "pallas"
+    np.testing.assert_array_equal(svc.lookup(q), lb)
+    # swap_keys preserves the spec on the fresh generation
+    svc.swap_keys(keys[: len(keys) // 2])
+    assert svc.generation.spec == sp.validated()
+
+    msvc = MutableLookupService(keys, MutableLookupServiceConfig(
+        spec=spec.IndexSpec("pgm", dict(eps=32)), max_batch=256,
+        auto_compact=False))
+    assert msvc.generation.spec == \
+        spec.IndexSpec("pgm", dict(eps=32)).validated()
+    np.testing.assert_array_equal(msvc.lookup(q), lb)
+
+
+# ---------------------------------------------------------------------------
+# Compaction retunes against the delta-merged key set (acceptance)
+# ---------------------------------------------------------------------------
+def test_compaction_retunes_with_tuner():
+    from repro.mutable.index import MutableIndex
+
+    keys, q, _ = _cell()
+    rng = np.random.default_rng(17)
+    inserts = rng.integers(int(keys[0]), int(keys[-1]), 400,
+                           dtype=np.uint64)
+    budget = 25_000
+    tuner = spec.Tuner(names=("rmi", "pgm"), max_bytes=budget,
+                       max_configs=3, seed=1)
+    mi = MutableIndex(keys, spec=spec.IndexSpec("rmi", dict(branching=512)),
+                      tuner=tuner, compact_threshold=1 << 30)
+    start_spec = mi.spec
+    mi.insert(inserts)
+    merged = np.unique(np.concatenate([keys, inserts]))
+    pre = mi.lookup(q)
+    np.testing.assert_array_equal(pre, np.searchsorted(merged, q))
+
+    gen = mi.compact()
+    assert gen is not None
+    # the new spec is EXACTLY what the tuner picks on the merged keys
+    expected = tuner.tune(merged).spec
+    assert mi.spec == expected
+    assert gen.spec == expected
+    assert gen.build.size_bytes <= budget
+    # retuning may change the structure but never the answers
+    np.testing.assert_array_equal(mi.lookup(q), pre)
+    # without a tuner the spec stays pinned
+    mi2 = MutableIndex(keys, spec=start_spec, compact_threshold=1 << 30)
+    mi2.insert(inserts)
+    assert mi2.compact() is not None
+    assert mi2.spec == start_spec.validated()
+
+
+def test_compaction_retune_preserves_backend_and_last_mile():
+    """A single-backend tuner performed no backend selection, so the
+    index's configured serving backend (and last-mile) must survive the
+    retune — only a multi-backend tuner may flip the backend."""
+    from repro.mutable.index import MutableIndex
+
+    keys, q, _ = _cell()
+    ins = np.random.default_rng(5).integers(
+        int(keys[0]), int(keys[-1]), 200, dtype=np.uint64)
+    tuner = spec.Tuner(names=("rmi", "pgm"), max_bytes=25_000,
+                       max_configs=3)
+    mi = MutableIndex(
+        keys,
+        spec=spec.IndexSpec("rmi", dict(branching=512), backend="pallas",
+                            last_mile="interpolation"),
+        tuner=tuner, compact_threshold=1 << 30)
+    mi.insert(ins)
+    gen = mi.compact()
+    assert gen is not None
+    assert mi.spec.backend == "pallas"
+    assert mi.spec.last_mile == "interpolation"
+    assert gen.backend == "pallas" and gen.spec == mi.spec
+    merged = np.unique(np.concatenate([keys, ins]))
+    np.testing.assert_array_equal(mi.lookup(q), np.searchsorted(merged, q))
+
+
+def test_mutable_service_compaction_retune_end_to_end():
+    from repro.serve.lookup import (MutableLookupService,
+                                    MutableLookupServiceConfig)
+
+    keys, q, _ = _cell()
+    tuner = spec.Tuner(names=("rmi", "pgm"), max_bytes=25_000,
+                       max_configs=3)
+    svc = MutableLookupService(keys, MutableLookupServiceConfig(
+        spec=spec.IndexSpec("rmi", dict(branching=512)),
+        compact_threshold=64, auto_compact=False, tuner=tuner,
+        max_batch=512))
+    rng = np.random.default_rng(23)
+    ins = rng.integers(int(keys[0]), int(keys[-1]), 300, dtype=np.uint64)
+    fut = svc.insert(ins)
+    svc.drain()
+    fut.result(30.0)
+    gen = svc.force_compact()
+    assert gen is not None and gen.build.size_bytes <= 25_000
+    assert gen.spec == svc.mindex.spec
+    merged = np.unique(np.concatenate([keys, ins]))
+    np.testing.assert_array_equal(svc.lookup(q),
+                                  np.searchsorted(merged, q))

@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import base
+from repro.core import spec as core_spec
 from repro.data import sosd
 from repro import workloads
 from repro.workloads import (MIXES, OP_INSERT, OP_RANGE, OP_READ, Workload,
@@ -238,8 +239,11 @@ def test_compaction_preserves_inserts_admitted_mid_rebuild():
         assert release.wait(10.0)
         return real_build(k, **h)
 
+    core_spec.register_schema("_test_slow_rmi2",
+                              fields=core_spec.SCHEMAS["rmi"].fields,
+                              ladder=[dict()])
     try:
-        mi.index = "_test_slow_rmi2"
+        mi.spec = mi.spec.replace(index="_test_slow_rmi2")
         t = threading.Thread(target=mi.compact)
         t.start()
         assert in_build.wait(10.0)
@@ -250,7 +254,8 @@ def test_compaction_preserves_inserts_admitted_mid_rebuild():
     finally:
         release.set()
         base.REGISTRY.pop("_test_slow_rmi2", None)
-        mi.index = "rmi"
+        core_spec.SCHEMAS.pop("_test_slow_rmi2", None)
+        mi.spec = mi.spec.replace(index="rmi")
     assert mi.delta_count == 1                     # late key survived
     np.testing.assert_array_equal(mi.view().delta.keys_np, late)
     assert first[0] in mi.view().base_np           # snapshot key folded in
@@ -279,19 +284,23 @@ def test_reset_during_compaction_discards_stale_rebuild():
         assert release.wait(10.0)
         return real_build(k, **h)
 
+    core_spec.register_schema("_test_slow_rmi3",
+                              fields=core_spec.SCHEMAS["rmi"].fields,
+                              ladder=[dict()])
     results = []
     try:
-        mi.index = "_test_slow_rmi3"
+        mi.spec = mi.spec.replace(index="_test_slow_rmi3")
         t = threading.Thread(target=lambda: results.append(mi.compact()))
         t.start()
         assert in_build.wait(10.0)
-        mi.index = "rmi"
+        mi.spec = mi.spec.replace(index="rmi")
         mi.reset(new_keys)                         # whole-key-set swap
         release.set()
         t.join(timeout=30.0)
     finally:
         release.set()
         base.REGISTRY.pop("_test_slow_rmi3", None)
+        core_spec.SCHEMAS.pop("_test_slow_rmi3", None)
     assert results == [None]                       # rebuild was abandoned
     np.testing.assert_array_equal(mi.view().base_np, new_keys)
     assert mi.delta_count == 0

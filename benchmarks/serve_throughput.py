@@ -6,23 +6,34 @@ in systems.  This benchmark drives `repro.serve.lookup.LookupService` —
 async admission, deadline/size micro-batching, sharded fused dispatch —
 with a stream of small requests and sweeps
 
-    micro-batch budget x index type x dataset,
+    executor x micro-batch budget x index type x dataset,
 
-emitting one JSON row per cell: achieved lookups/sec, batch latency
-(mean/p99), batcher occupancy, and `verified_vs_core` — the service's
-positions compared bit-for-bit against a direct single-device
-`repro.core` fused lookup on the same query stream.
+emitting one JSON row per cell: achieved lookups/sec, the DECOMPOSED
+latency distribution (queue = admission->dispatch, batch = dispatch->
+complete, request = end-to-end), batcher occupancy, executor counters
+(executable-cache hit rate, in-flight slot depth), and
+`verified_vs_core` — the service's positions compared bit-for-bit
+against a direct single-device `repro.core` fused lookup on the same
+query stream.
 
-Small max_batch buys latency at an occupancy/throughput cost; large
-max_batch amortizes dispatch overhead — the serving-layer analogue of
-the paper's Fig. 14 batching study.  On 1 CPU device the sharded path
-measures its own overhead; with more devices (or
-``--xla_force_host_platform_device_count``) it measures real scaling.
+The ``executor`` axis is the DESIGN.md §13 comparison: "sync" is the
+serial take -> block -> complete reference loop, whose p99 carries every
+first-touch trace/compile; "async" is the continuous-batching engine —
+pre-compiled executable cache (warmed before serving), launch-without-
+blocking double buffering, bounded in-flight slot ring.  Same requests,
+same bit-exact results; the p99_request_ms column is the number the
+async executor exists to shrink.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py
+    PYTHONPATH=src python benchmarks/serve_throughput.py --executor async --smoke
+
+``--smoke`` runs one tiny sync-vs-async cell and exits nonzero if the
+async positions diverge from sync by one bit or the warmed executable
+cache never hits — the CI tripwire for the §13 parity contract.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -46,13 +57,16 @@ INDEX_NAMES = ["rmi", "pgm", "radix_spline"]
 
 DATASETS = ["amzn", "face", "osm", "wiki"]
 
+#: dispatch-engine axis (DESIGN.md §13)
+EXECUTORS = ["sync", "async"]
+
 #: queries per cell — enough batches for a latency distribution, small
-#: enough that the 24-cell sweep stays CPU-container friendly.
+#: enough that the 48-cell sweep stays CPU-container friendly.
 N_SERVE_Q = int(os.environ.get("SERVE_Q", min(C.N_QUERIES, 10_000)))
 
 
 def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
-              backend: str = "jnp"):
+              backend: str = "jnp", executor: str = "sync"):
     import jax.numpy as jnp
     from repro.serve.lookup import LookupService, LookupServiceConfig
 
@@ -62,11 +76,11 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
     t0 = time.perf_counter()
     svc = LookupService(keys, LookupServiceConfig(
         spec=spec.replace(backend=backend),
-        max_batch=max_batch, deadline_ms=2.0))
+        max_batch=max_batch, deadline_ms=2.0, executor=executor))
     build_s = time.perf_counter() - t0
 
     chunks = [q[i:i + request_keys] for i in range(0, len(q), request_keys)]
-    with svc:                       # background flusher
+    with svc:                       # background flusher (warms when async)
         futs = [svc.submit(c) for c in chunks]
         outs = [f.result(timeout=120.0) for f in futs]
     got = np.concatenate(outs)
@@ -80,10 +94,11 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
     verified = bool(np.array_equal(got, direct))
 
     snap = svc.metrics.snapshot()
-    return {
+    row = {
         "dataset": ds,
         "index": spec.index,
         "spec": svc.generation.spec.to_dict(),
+        "executor": executor,
         "max_batch": max_batch,
         "backend": backend,
         "request_keys": request_keys,
@@ -94,20 +109,31 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
         "lookups_per_s": round(snap["lookups_per_s"], 1),
         "mean_batch_ms": round(snap["mean_batch_ms"], 4),
         "p99_batch_ms": round(snap["p99_batch_ms"], 4),
+        # latency decomposition (§13 observability): queue + batch ~=
+        # request, so a p99 regression names its own culprit
+        "p99_queue_ms": round(snap["p99_queue_ms"], 4),
+        "mean_request_ms": round(snap["mean_request_ms"], 4),
+        "p99_request_ms": round(snap["p99_request_ms"], 4),
+        "cache_hit_rate": round(snap["cache_hit_rate"], 4),
+        "warm_compiles": snap["warm_compiles"],
+        "mean_inflight_slots": round(snap["mean_inflight_slots"], 3),
         "mean_occupancy": round(snap["mean_occupancy"], 4),
         "batches": snap["batches"],
         "verified_vs_core": verified,
     }
+    return row, got
 
 
 def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
-        autotune=None):
+        autotune=None, executor: str = "both"):
     """Sweep the service.  ``spec`` pins ONE declarative IndexSpec for
     every cell; ``autotune`` (a byte budget) lets the `spec.Tuner` pick
-    the per-dataset spec+backend instead of the serving defaults."""
+    the per-dataset spec+backend instead of the serving defaults;
+    ``executor`` picks one engine or "both" (the §13 A/B columns)."""
     from repro.serve.lookup import default_spec
 
     backend = backend or C.BACKEND
+    executors = EXECUTORS if executor == "both" else [executor]
     rows = []
     for ds in DATASETS:
         if spec is not None:
@@ -122,13 +148,19 @@ def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
             be = sp.backend if (autotune is not None
                                 and spec is None) else backend
             for max_batch, request_keys in BATCH_POINTS:
-                r = _run_cell(ds, sp, max_batch, request_keys, backend=be)
-                rows.append(r)
-                print(f"{ds:5s} {r['index']:12s} batch={max_batch:5d} "
-                      f"{r['lookups_per_s']/1e3:9.1f} klookups/s  "
-                      f"p99={r['p99_batch_ms']:8.2f}ms  occ="
-                      f"{r['mean_occupancy']:.2f}  "
-                      f"verified={r['verified_vs_core']}", flush=True)
+                for ex in executors:
+                    r, _ = _run_cell(ds, sp, max_batch, request_keys,
+                                     backend=be, executor=ex)
+                    rows.append(r)
+                    print(f"{ds:5s} {r['index']:12s} {ex:5s} "
+                          f"batch={max_batch:5d} "
+                          f"{r['lookups_per_s']/1e3:9.1f} klookups/s  "
+                          f"p99_req={r['p99_request_ms']:8.2f}ms  "
+                          f"hit={r['cache_hit_rate']:.2f}  occ="
+                          f"{r['mean_occupancy']:.2f}  "
+                          f"verified={r['verified_vs_core']}", flush=True)
+    if executor == "both":
+        _print_speedups(rows)
     path = os.path.join(out_dir, "serve_throughput.json")
     os.makedirs(out_dir, exist_ok=True)
     with open(path, "w") as f:
@@ -140,6 +172,70 @@ def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
     return rows
 
 
+def _print_speedups(rows):
+    """Per-cell sync/async p99 ratio — the §13 headline column."""
+    cells = {}
+    for r in rows:
+        k = (r["dataset"], r["index"], r["max_batch"])
+        cells.setdefault(k, {})[r["executor"]] = r
+    ratios = []
+    for (ds, ix, mb), pair in sorted(cells.items()):
+        if "sync" not in pair or "async" not in pair:
+            continue
+        p_sync = pair["sync"]["p99_request_ms"]
+        p_async = pair["async"]["p99_request_ms"]
+        ratio = p_sync / p_async if p_async else float("inf")
+        ratios.append(ratio)
+        print(f"  p99 speedup {ds:5s} {ix:12s} batch={mb:5d}: "
+              f"{p_sync:8.2f}ms -> {p_async:7.2f}ms  ({ratio:5.1f}x)",
+              flush=True)
+    if ratios:
+        print(f"  p99 speedup median: {np.median(ratios):.1f}x  "
+              f"(min {min(ratios):.1f}x, max {max(ratios):.1f}x)",
+              flush=True)
+
+
+def smoke(backend=None, executor: str = "async") -> None:
+    """One tiny A/B cell, CI tripwire semantics: exit NONZERO when
+    (a) the async executor's positions differ from the sync executor's
+    by even one bit, (b) the warmed executable cache never hits under
+    serving traffic, or (c) either engine diverges from the direct
+    `repro.core` lookup."""
+    from repro.serve.lookup import default_spec
+
+    backend = backend or C.BACKEND
+    sp = default_spec("rmi")
+    row_s, got_s = _run_cell("amzn", sp, 512, 32, backend=backend,
+                             executor="sync")
+    row_a, got_a = _run_cell("amzn", sp, 512, 32, backend=backend,
+                             executor=executor)
+    for tag, row in (("sync", row_s), (executor, row_a)):
+        print(f"  {tag:5s}: p99_req={row['p99_request_ms']:8.2f}ms  "
+              f"p99_queue={row['p99_queue_ms']:8.2f}ms  "
+              f"hit={row['cache_hit_rate']:.2f}  "
+              f"verified={row['verified_vs_core']}", flush=True)
+    if not np.array_equal(got_s, got_a):
+        raise SystemExit(
+            f"{executor} executor DIVERGED from sync: "
+            f"{int(np.sum(got_s != got_a))}/{got_s.size} positions differ")
+    if not (row_s["verified_vs_core"] and row_a["verified_vs_core"]):
+        raise SystemExit("service positions diverged from repro.core")
+    if executor == "async" and row_a["cache_hit_rate"] <= 0.0:
+        raise SystemExit("async executable cache NEVER hit after warm-up")
+    print(f"smoke ok: {executor} bit-identical to sync "
+          f"({got_s.size} positions), cache hit rate "
+          f"{row_a['cache_hit_rate']:.2f}", flush=True)
+
+
 if __name__ == "__main__":
     _ns = C.bench_args()
-    run(backend=_ns.backend, spec=_ns.spec, autotune=_ns.autotune)
+    _ap = argparse.ArgumentParser(add_help=False)
+    _ap.add_argument("--executor", choices=("sync", "async", "both"),
+                     default="both")
+    _ex = _ap.parse_known_args()[0].executor
+    if _ns.smoke:
+        smoke(backend=_ns.backend,
+              executor="async" if _ex == "both" else _ex)
+    else:
+        run(backend=_ns.backend, spec=_ns.spec, autotune=_ns.autotune,
+            executor=_ex)

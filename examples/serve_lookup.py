@@ -3,6 +3,10 @@
 Four concurrent "clients" stream key lookups at a LookupService while it
 micro-batches them into sharded fused dispatches; mid-stream the key set
 is rebuilt and hot-swapped without draining a single in-flight batch.
+The service runs the continuous-batching async executor (DESIGN.md §13):
+a warmed executable cache, launch-without-blocking double buffering, and
+a bounded in-flight slot ring — hot-swap invalidates and re-warms the
+cache without pausing admission.
 
     PYTHONPATH=src python examples/serve_lookup.py
 """
@@ -24,7 +28,7 @@ KEYS_PER_REQUEST = 64
 keys = sosd.generate("amzn", N_KEYS, seed=1)
 svc = LookupService(keys, LookupServiceConfig(
     spec=IndexSpec("rmi", dict(branching=2048)),
-    max_batch=1024, deadline_ms=1.0))
+    max_batch=1024, deadline_ms=1.0, executor="async"))
 
 errors = []
 
@@ -75,6 +79,12 @@ print(f"  {snap['batches']} dispatched batches, "
       f"{snap['lookups_per_s']/1e3:.1f} klookups/s")
 print(f"  batch latency mean {snap['mean_batch_ms']:.2f}ms / "
       f"p99 {snap['p99_batch_ms']:.2f}ms; "
-      f"queue p99 {snap['p99_queue_ms']:.2f}ms")
+      f"queue p99 {snap['p99_queue_ms']:.2f}ms; "
+      f"request p99 {snap['p99_request_ms']:.2f}ms")
+print(f"  executable cache: hit rate {snap['cache_hit_rate']:.2f} "
+      f"({snap['cache_hits']} hits, {snap['cache_misses']} misses, "
+      f"{snap['warm_compiles']} warm compiles); "
+      f"in-flight slots mean {snap['mean_inflight_slots']:.2f} / "
+      f"max {snap['max_inflight_slots']}")
 print(f"  wrong answers: {len(errors)}")
 assert not errors

@@ -59,8 +59,9 @@ def run_lookup(args):
           else default_spec(args.index))
     svc = LookupService(keys, LookupServiceConfig(
         spec=sp, max_batch=args.max_batch,
-        deadline_ms=args.deadline_ms))
-    print(f"serving spec: {svc.generation.spec.to_json()}")
+        deadline_ms=args.deadline_ms, executor=args.executor))
+    print(f"serving spec: {svc.generation.spec.to_json()} "
+          f"(executor={args.executor})")
     q = sosd.make_queries(keys, args.requests * args.keys_per_request, seed=2)
 
     t0 = time.time()
@@ -80,7 +81,9 @@ def run_lookup(args):
           f"{snap['batches']} batches, "
           f"occupancy {snap['mean_occupancy']:.2f}, "
           f"batch p99 {snap['p99_batch_ms']:.2f}ms, "
-          f"queue p99 {snap['p99_queue_ms']:.2f}ms")
+          f"queue p99 {snap['p99_queue_ms']:.2f}ms, "
+          f"request p99 {snap['p99_request_ms']:.2f}ms, "
+          f"cache hit rate {snap['cache_hit_rate']:.2f}")
     print(f"exact vs lower_bound oracle: {exact}")
 
 
@@ -105,6 +108,10 @@ def main():
     ap.add_argument("--n-keys", type=int, default=200_000)
     ap.add_argument("--keys-per-request", type=int, default=64)
     ap.add_argument("--deadline-ms", type=float, default=2.0)
+    ap.add_argument("--executor", choices=("sync", "async"), default="async",
+                    help="lookup dispatch engine (DESIGN.md §13): the "
+                         "continuous-batching async executor (default) "
+                         "or the serial sync reference loop")
     args = ap.parse_args()
 
     if args.mode == "lookup":

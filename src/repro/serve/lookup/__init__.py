@@ -12,6 +12,8 @@ batches, never inside one.
 from repro.serve.lookup.admission import (ClientBacklogFull, LookupFuture,
                                           MicroBatcher)
 from repro.serve.lookup.dispatch import ShardedDispatcher, make_plan
+from repro.serve.lookup.executor import (AsyncContext, AsyncExecutor,
+                                         ExecutableCache)
 from repro.serve.lookup.metrics import ServiceMetrics
 from repro.serve.lookup.mutable_service import (MutableLookupService,
                                                 MutableLookupServiceConfig)
@@ -22,6 +24,9 @@ from repro.serve.lookup.service import (DEFAULT_HYPER, LookupService,
 __all__ = [
     "DEFAULT_HYPER",
     "default_spec",
+    "AsyncContext",
+    "AsyncExecutor",
+    "ExecutableCache",
     "ClientBacklogFull",
     "LookupFuture",
     "MicroBatcher",

@@ -192,11 +192,19 @@ class MicroBatcher:
         with self._cond:
             return self._ready_locked(time.perf_counter())
 
-    def wait_ready(self, timeout: Optional[float] = None) -> bool:
-        """Block until a flush is due (size OR deadline) or `timeout`."""
+    def wait_ready(self, timeout: Optional[float] = None,
+                   until=None) -> bool:
+        """Block until a flush is due (size OR deadline) or `timeout`.
+
+        ``until`` is an optional predicate checked on every wake-up:
+        when it turns true the wait returns False immediately — paired
+        with `wake()`, a flusher can wait with no timeout at all and
+        still shut down promptly (no polling loop)."""
         t_end = None if timeout is None else time.perf_counter() + timeout
         with self._cond:
             while True:
+                if until is not None and until():
+                    return False
                 now = time.perf_counter()
                 if self._ready_locked(now):
                     return True
@@ -212,6 +220,12 @@ class MicroBatcher:
                         return False
                     waits.append(t_end - now)
                 self._cond.wait(timeout=min(waits) if waits else None)
+
+    def wake(self) -> None:
+        """Nudge every `wait_ready` waiter to re-check its ``until``
+        predicate (shutdown signal — state here does not change)."""
+        with self._cond:
+            self._cond.notify_all()
 
     def take(self, force: bool = False) -> List[PendingRequest]:
         """Drain whole requests, in order, up to ``max_batch`` keys.

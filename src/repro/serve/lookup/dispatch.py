@@ -71,17 +71,20 @@ class ShardedDispatcher:
         r = p % self.n_shards
         return p + (self.n_shards - r if r else 0)
 
-    def __call__(self, fn, keys: np.ndarray, backend: str = "jnp"):
-        """Run a plan (compiled on demand for ``backend``) or any jitted
-        lookup callable on `keys`.
+    def query_sharding(self, p: int):
+        """The placement of a padded query batch — one rule walk through
+        the dist layer (also what AOT executable lowering keys on)."""
+        return SH.act_sharding((p,), ("batch",), self.mesh)
 
-        Returns int64 positions for plain lookups; executables that
-        return a tuple (e.g. a plan's scan: positions + record window)
-        come back as a tuple of host arrays, each sliced to the real
-        batch size along axis 0.
-        """
-        if isinstance(fn, plan_mod.LookupPlan):
-            fn = fn.compile(backend=backend)
+    def place(self, q_padded: np.ndarray):
+        """Device-put one already-padded batch over the data axis."""
+        q_padded = np.asarray(q_padded, dtype=np.uint64)
+        return jax.device_put(jnp.asarray(q_padded),
+                              self.query_sharding(q_padded.size))
+
+    def pad_and_place(self, keys: np.ndarray):
+        """Pad to the pow2 bucket and place on the mesh; returns
+        ``(device batch, padded size)`` — the launch half of dispatch."""
         keys = np.asarray(keys, dtype=np.uint64)
         m = keys.size
         p = self.padded_size(m)
@@ -91,9 +94,28 @@ class ShardedDispatcher:
             q[m:] = keys[0]  # any valid key: lanes are independent
         else:
             q = keys
-        qj = jax.device_put(
-            jnp.asarray(q), SH.act_sharding((p,), ("batch",), self.mesh))
-        out = fn(qj)
+        return self.place(q), p
+
+    @staticmethod
+    def finalize(out, m: int):
+        """Block on a launched computation and slice off the pad lanes —
+        the completion half of dispatch (the only point that waits on
+        the device, which is what the async executor overlaps)."""
         if isinstance(out, tuple):
             return tuple(np.asarray(o)[:m] for o in out)
         return np.asarray(out, dtype=np.int64)[:m]
+
+    def __call__(self, fn, keys: np.ndarray, backend: str = "jnp"):
+        """Run a plan (compiled on demand for ``backend``) or any jitted
+        lookup callable on `keys`, synchronously: launch then finalize.
+
+        Returns int64 positions for plain lookups; executables that
+        return a tuple (e.g. a plan's scan: positions + record window)
+        come back as a tuple of host arrays, each sliced to the real
+        batch size along axis 0.
+        """
+        if isinstance(fn, plan_mod.LookupPlan):
+            fn = fn.compile(backend=backend)
+        keys = np.asarray(keys, dtype=np.uint64)
+        qj, _p = self.pad_and_place(keys)
+        return self.finalize(fn(qj), keys.size)

@@ -1,0 +1,480 @@
+"""Continuous-batching async executor + executable cache (DESIGN.md §13).
+
+The synchronous dispatch path (`LookupService._dispatch_once`) is serial
+batch-at-a-time: take a batch, trace/compile on first contact, block on
+the device, complete futures, only then admit the next batch.  The p99
+of that loop is bounded by Python dispatch and first-touch compilation,
+not by kernel time (`benchmarks/results/serve_throughput.json`).  This
+module rebuilds the path the way LLM inference servers do:
+
+  executable cache   `ExecutableCache` maps ``(context key, kind, aux,
+                     pow2 batch bucket)`` to a ready-to-run executable —
+                     AOT-lowered (`jitted.lower(...).compile()`) against
+                     the dispatcher's padded bucket shape and batch
+                     sharding where the callable supports it, the primed
+                     jit wrapper otherwise.  Steady-state dispatch never
+                     re-traces or re-compiles; warm-up primes the common
+                     buckets at `start()` and again after every hot-swap
+                     (`IndexRegistry` publish subscription), off the
+                     dispatch thread.
+
+  double buffering   the DISPATCH thread takes a batch, pins its
+                     context, pads, places, and LAUNCHES the device step
+                     without blocking on it (jax async dispatch); the
+                     COMPLETION thread blocks on device results and
+                     resolves futures.  Admission and host-side
+                     completion of batch N overlap the in-flight device
+                     execution of batch N+1.
+
+  slot ring          launched batches ride a bounded FIFO ring of
+                     in-flight slots.  A straggler (scan run, cold
+                     bucket) occupies one slot; admission (`submit`)
+                     never blocks, and the dispatch thread only waits
+                     when the whole ring is full — bounded in-flight
+                     memory, no unbounded queue growth.  Completing
+                     slots strictly in ring order preserves the global
+                     admission order, hence per-client FIFO completion.
+
+Every result is bit-identical to the synchronous path: both execute the
+same plan-compiled programs over the same padded buckets, and positions/
+windows are exact integers (pinned across the index × backend matrix by
+tests/test_serve_executor.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["AsyncContext", "AsyncExecutor", "ExecutableCache", "WorkItem"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncContext:
+    """One pinned lookup context, executable-cache addressable.
+
+    ``key`` namespaces the cache: everything the compiled program
+    depends on beyond operand shapes — the generation version (and, for
+    merged mutable views, the padded delta length, a compile-shape
+    axis).  ``bind`` holds extra device operands appended after the
+    query batch (the padded delta for merged lookups); they vary per
+    view without invalidating the cached executable, which is exactly
+    why the merged fn takes the delta as an ARGUMENT, not a closure.
+    """
+
+    key: Tuple                 # hashable; key[0] is the generation version
+    read_fn: Callable          # (q, *bind) -> positions
+    scan_fn: Callable          # m -> ((q, *bind) -> (positions, window))
+    bind: Tuple = ()           # device operands appended after q
+    sample_key: int = 1        # a valid key for warm-up dummy batches
+
+
+@dataclasses.dataclass
+class WorkItem:
+    """One dispatchable unit: a same-kind request group + how to run it."""
+
+    kind: str                           # "read" | "scan" | "insert"
+    group: List                         # PendingRequests, admission order
+    ctx: Optional[AsyncContext] = None  # device kinds only
+    aux: int = 0                        # scan length for kind="scan"
+    apply_fn: Optional[Callable] = None  # host op (inserts): group -> array
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One in-flight ring entry.  Exactly one of (out, host, error) is
+    meaningful: a launched device computation, a host-side result that
+    is already final (inserts), or a launch failure to propagate."""
+
+    group: List
+    kind: str
+    out: Any = None              # in-flight device output (async dispatch)
+    m: int = 0                   # real key count (pre-padding)
+    padded: int = 0
+    host: Any = None             # host-ready result (inserts)
+    error: Optional[BaseException] = None
+    t_submit_oldest: float = 0.0
+    t_launch: float = 0.0
+    is_insert: bool = False
+
+
+_STOP = object()
+
+
+class ExecutableCache:
+    """(context key, kind, aux, bucket) -> ready-to-run executable.
+
+    The cache makes compilation an explicit, observable event instead of
+    a silent p99 outlier: a **miss** builds the executable (AOT when the
+    callable is a jitted function, fallback to the callable itself — the
+    plan layer's jit wrappers keep their own shape-keyed trace cache, so
+    a stored wrapper never re-traces for a bucket it has seen); a
+    **hit** dispatches a pre-compiled program with only data operands
+    changing.  Counters feed `ServiceMetrics` so a zero steady-state hit
+    rate (per-batch recompiles) is a test failure, not a latency
+    mystery.  `invalidate(keep_version=...)` evicts every entry of older
+    generations on hot-swap; in-flight slots hold direct references to
+    their executables, so eviction never races a running batch.
+    """
+
+    def __init__(self, metrics=None):
+        self._mu = threading.Lock()
+        self._exes: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.warm_compiles = 0
+        self.metrics = metrics
+
+    # -- stats -----------------------------------------------------------
+    def counters(self) -> Tuple[int, int]:
+        with self._mu:
+            return self.hits, self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        with self._mu:
+            n = self.hits + self.misses
+            return self.hits / n if n else 0.0
+
+    def __len__(self) -> int:
+        with self._mu:
+            return len(self._exes)
+
+    # -- build/get -------------------------------------------------------
+    @staticmethod
+    def _build(fn, bucket: int, bind: Tuple, dispatcher):
+        """AOT-lower ``fn`` for the padded bucket (batch-sharded query +
+        replicated bind operands) when it supports `.lower`; otherwise
+        return the callable unchanged (jit wrappers carry their own
+        per-shape cache; injected plain callables just run)."""
+        import jax
+        import jax.numpy as jnp
+
+        lower = getattr(fn, "lower", None)
+        if lower is None:
+            return fn
+        try:
+            sds_q = jax.ShapeDtypeStruct(
+                (bucket,), jnp.uint64,
+                sharding=dispatcher.query_sharding(bucket))
+            sds_bind = [jax.ShapeDtypeStruct(b.shape, b.dtype) for b in bind]
+            return lower(sds_q, *sds_bind).compile()
+        except Exception:   # noqa: BLE001 — AOT is an optimization only
+            return fn
+
+    def get(self, ctx: AsyncContext, kind: str, aux: int, bucket: int,
+            make_fn: Callable, dispatcher, warm: bool = False):
+        """Return the executable for one cell, building it on miss.
+
+        ``make_fn`` produces the source callable (``gen.fn``, a merged
+        fn, a scan executable); it only runs on a miss.  ``warm=True``
+        counts the build as a warm-up compile instead of a serving-path
+        miss, so steady-state hit-rate assertions are not diluted by
+        deliberate priming.
+        """
+        key = (ctx.key, kind, int(aux), int(bucket))
+        with self._mu:
+            exe = self._exes.get(key)
+            hit = exe is not None
+            # warm-up traffic never counts toward serving hit/miss: the
+            # steady-state hit-rate assertion must measure real batches
+            if warm:
+                self.warm_compiles += 0 if hit else 1
+            elif hit:
+                self.hits += 1
+            else:
+                self.misses += 1
+        if exe is None:
+            exe = self._build(make_fn(), bucket, ctx.bind, dispatcher)
+            with self._mu:
+                self._exes[key] = exe
+        if self.metrics is not None:
+            self.metrics.note_cache(hit=hit, warm=warm)
+        return exe
+
+    def invalidate(self, keep_version=None) -> int:
+        """Evict entries; with ``keep_version`` set, only entries whose
+        context belongs to another generation go (hot-swap policy: the
+        new generation's warm-up repopulates, old executables die)."""
+        with self._mu:
+            if keep_version is None:
+                n = len(self._exes)
+                self._exes.clear()
+                return n
+            stale = [k for k in self._exes if k[0][0] != keep_version]
+            for k in stale:
+                del self._exes[k]
+            return len(stale)
+
+    def warmup(self, ctx: AsyncContext, buckets, dispatcher,
+               scan_lengths=()) -> int:
+        """Prime read (and optionally scan) executables for ``buckets``
+        and run one dummy batch through each — after this, the first
+        real batch of a warmed bucket is a cache hit with no trace, no
+        compile, no first-touch initialization.  Runs off the dispatch
+        thread (service `start()`, or the post-publish warm thread)."""
+        import jax
+
+        n = 0
+        cells = [("read", 0, lambda: ctx.read_fn)]
+        cells += [("scan", int(m), (lambda m=m: ctx.scan_fn(int(m))))
+                  for m in scan_lengths]
+        for bucket in buckets:
+            dummy = dispatcher.place(
+                np.full(int(bucket), ctx.sample_key, np.uint64))
+            for kind, aux, make_fn in cells:
+                exe = self.get(ctx, kind, aux, int(bucket), make_fn,
+                               dispatcher, warm=True)
+                jax.block_until_ready(exe(dummy, *ctx.bind))
+                n += 1
+        return n
+
+
+class AsyncExecutor:
+    """Slot-ring continuous batching over one service's dispatch path.
+
+    Two daemon threads once `start()`ed:
+
+      dispatch    waits on the micro-batcher, takes batches in admission
+                  order, walks the service's work items (re-pinning per
+                  run for the mutable service), resolves executables
+                  through the cache, and LAUNCHES device work without
+                  blocking; host work (inserts) is applied inline so a
+                  later read run observes it — then rides the ring as an
+                  already-final slot to keep completion in order.
+      completion  pops slots in FIFO order, blocks on device results,
+                  slices per request, resolves futures, records the
+                  decomposed latencies.
+
+    Stopped, it degrades to an inline engine: `drain()` launches and
+    completes everything on the caller's thread, so synchronous tests
+    and the `lookup()` convenience keep working without threads.
+    """
+
+    def __init__(self, service, slots: int = 4):
+        if slots < 2:
+            raise ValueError("async executor needs >= 2 slots "
+                             "(double buffering)")
+        self.svc = service
+        self.slots = int(slots)
+        self._ring: "queue.Queue" = queue.Queue(maxsize=self.slots)
+        self._launch_mu = threading.Lock()   # serializes take+launch order
+        self._inflight = 0
+        self._inflight_cv = threading.Condition()
+        self._stop = threading.Event()
+        self._dispatch_t: Optional[threading.Thread] = None
+        self._complete_t: Optional[threading.Thread] = None
+
+    @property
+    def running(self) -> bool:
+        return self._dispatch_t is not None
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> threading.Thread:
+        """Spawn the dispatch + completion pair; returns the dispatch
+        thread (the service exposes it as its flusher `_thread`)."""
+        if self._dispatch_t is not None:
+            return self._dispatch_t
+        self._stop.clear()
+        self._complete_t = threading.Thread(
+            target=self._completion_loop, name="lookup-completer",
+            daemon=True)
+        self._dispatch_t = threading.Thread(
+            target=self._dispatch_loop, name="lookup-dispatcher",
+            daemon=True)
+        self._complete_t.start()
+        self._dispatch_t.start()
+        return self._dispatch_t
+
+    def stop(self) -> None:
+        """Join both threads, completing every admitted request: the
+        dispatch loop force-drains admissions on its way out, the
+        completion loop runs the ring dry before honoring the sentinel,
+        and a final inline drain covers the join window."""
+        if self._dispatch_t is None:
+            return
+        self._stop.set()
+        self.svc.batcher.wake()
+        self._dispatch_t.join()
+        self._ring.put(_STOP)
+        self._complete_t.join()
+        self._dispatch_t = None
+        self._complete_t = None
+        self._stop.clear()
+        self.drain()   # anything admitted during the join window
+
+    # -- loops -----------------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        svc = self.svc
+        while not self._stop.is_set():
+            if svc.batcher.wait_ready(timeout=5.0,
+                                      until=self._stop.is_set):
+                with self._launch_mu:
+                    batch = svc.batcher.take(force=False)
+                    if batch:
+                        self._launch_batch(batch)
+        # exit path: launch everything admitted before stop()
+        self._drain_launches()
+
+    def _completion_loop(self) -> None:
+        while True:
+            slot = self._ring.get()
+            if slot is _STOP:
+                return
+            self._complete_slot(slot)
+
+    # -- launching -------------------------------------------------------
+    def _launch_batch(self, batch) -> None:
+        """Walk the service's work items lazily and in order: an insert
+        item is APPLIED when reached, so the next run's pinned context
+        observes it (the admission-order invariant), while device items
+        launch without blocking."""
+        for item in self.svc._async_work_items(batch):
+            self._launch_item(item)
+
+    def _launch_item(self, item: WorkItem) -> None:
+        svc = self.svc
+        group = item.group
+        t_oldest = group[0].t_submit
+        if item.kind == "insert":
+            t0 = time.perf_counter()
+            try:
+                host = item.apply_fn(group)
+            except BaseException as e:   # noqa: BLE001 — fail the run only
+                self._put(_Slot(group=group, kind=item.kind, error=e,
+                                t_submit_oldest=t_oldest, t_launch=t0,
+                                is_insert=True))
+                return
+            self._put(_Slot(group=group, kind=item.kind, host=host,
+                            m=sum(r.keys.size for r in group),
+                            t_submit_oldest=t_oldest, t_launch=t0,
+                            is_insert=True))
+            return
+
+        keys = (group[0].keys if len(group) == 1
+                else np.concatenate([r.keys for r in group]))
+        t0 = time.perf_counter()
+        try:
+            ctx = item.ctx
+            make_fn = ((lambda: ctx.read_fn) if item.kind == "read"
+                       else (lambda: ctx.scan_fn(item.aux)))
+            q, padded = svc.dispatcher.pad_and_place(keys)
+            exe = svc.exec_cache.get(ctx, item.kind, item.aux, padded,
+                                     make_fn, svc.dispatcher)
+            out = exe(q, *ctx.bind)      # async dispatch: does not block
+        except BaseException as e:       # noqa: BLE001 — fail the group only
+            self._put(_Slot(group=group, kind=item.kind, error=e,
+                            t_submit_oldest=t_oldest, t_launch=t0))
+            return
+        self._put(_Slot(group=group, kind=item.kind, out=out, m=keys.size,
+                        padded=padded, t_submit_oldest=t_oldest,
+                        t_launch=t0))
+
+    def _put(self, slot: _Slot) -> None:
+        with self._inflight_cv:
+            self._inflight += 1
+            depth = self._inflight
+        if self.svc.metrics is not None:
+            self.svc.metrics.note_slot_depth(depth)
+        if self.running:
+            self._ring.put(slot)   # blocks when the ring is full: bounded
+            return
+        # inline mode has no completion thread to make room — keep the
+        # bounded-ring invariant by completing the oldest slot here
+        while True:
+            try:
+                self._ring.put_nowait(slot)
+                return
+            except queue.Full:
+                self._complete_slot(self._ring.get())
+
+    # -- completion ------------------------------------------------------
+    def _complete_slot(self, slot: _Slot) -> None:
+        svc = self.svc
+        try:
+            if slot.error is not None:
+                for r in slot.group:
+                    r.future._set_exception(slot.error)
+            elif slot.is_insert:
+                svc._complete_insert_slot(slot)
+            else:
+                try:
+                    out = svc.dispatcher.finalize(slot.out, slot.m)
+                except BaseException as e:   # noqa: BLE001 — device failure
+                    for r in slot.group:     # fails the slot, not the loop
+                        r.future._set_exception(e)
+                    return
+                t_end = time.perf_counter()
+                off = 0
+                for r in slot.group:
+                    end = off + r.keys.size
+                    r.future._set_result(
+                        tuple(o[off:end] for o in out)
+                        if isinstance(out, tuple) else out[off:end])
+                    off = end
+                svc.metrics.observe_batch(
+                    n_keys=slot.m, padded=slot.padded,
+                    n_requests=len(slot.group),
+                    t_oldest_submit=slot.t_submit_oldest,
+                    t_start=slot.t_launch, t_end=t_end)
+        finally:
+            with self._inflight_cv:
+                self._inflight -= 1
+                self._inflight_cv.notify_all()
+
+    # -- synchronous faces ------------------------------------------------
+    def _drain_launches(self) -> int:
+        """Force-take and launch until the admission queue is empty."""
+        n = 0
+        with self._launch_mu:
+            while True:
+                batch = self.svc.batcher.take(force=True)
+                if not batch:
+                    return n
+                self._launch_batch(batch)
+                n += 1
+
+    def _complete_ring_inline(self) -> None:
+        """Run the completion side on the caller's thread (no-thread
+        mode: synchronous tests, `lookup()` without `start()`)."""
+        while True:
+            try:
+                slot = self._ring.get_nowait()
+            except queue.Empty:
+                return
+            self._complete_slot(slot)
+
+    def _wait_idle(self, timeout: Optional[float] = None) -> bool:
+        with self._inflight_cv:
+            return self._inflight_cv.wait_for(
+                lambda: self._inflight == 0, timeout=timeout)
+
+    def flush(self) -> bool:
+        """Launch one due batch if any; wait until in-flight work is
+        complete (same observable effect as the sync `flush`)."""
+        launched = False
+        with self._launch_mu:
+            batch = self.svc.batcher.take(force=False)
+            if batch:
+                self._launch_batch(batch)
+                launched = True
+        self._settle()
+        return launched
+
+    def drain(self) -> int:
+        """Force-dispatch until the queue is empty AND every launched
+        slot has completed; returns the batch count.  Safe to call from
+        any thread, with or without the loops running."""
+        n = self._drain_launches()
+        self._settle()
+        return n
+
+    def _settle(self) -> None:
+        if self.running:
+            self._wait_idle()
+        else:
+            self._complete_ring_inline()

@@ -66,12 +66,24 @@ class ServiceMetrics:
         self._lock = threading.Lock()
         self.batch_latency = LatencyHistogram()
         self.queue_latency = LatencyHistogram()
+        #: end-to-end: oldest submit -> futures resolved.  With the async
+        #: executor, p99 decomposes as queue (admission->dispatch) +
+        #: batch (dispatch->complete) ~= request — the §13 observability
+        #: contract that makes a p99 regression attributable.
+        self.request_latency = LatencyHistogram()
         self.n_batches = 0
         self.n_keys = 0
         self.n_requests = 0
         self.sum_occupancy = 0.0
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
+        # -- executor observability (async executor; zero otherwise) -----
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.warm_compiles = 0
+        self.sum_inflight = 0
+        self.n_inflight_obs = 0
+        self.max_inflight = 0
         # -- write side (mutable service; zero for read-only services) --
         self.insert_latency = LatencyHistogram()
         self.compaction_latency = LatencyHistogram()
@@ -93,9 +105,31 @@ class ServiceMetrics:
             self.sum_occupancy += n_keys / max(padded, 1)
             self.batch_latency.record(t_end - t_start)
             self.queue_latency.record(t_start - t_oldest_submit)
+            self.request_latency.record(t_end - t_oldest_submit)
             if self.t_first is None:
                 self.t_first = t_start
             self.t_last = t_end
+
+    def note_cache(self, *, hit: bool, warm: bool = False) -> None:
+        """One executable-cache access (from `ExecutableCache.get`).
+        Warm-up accesses only count their compiles — hit-rate reflects
+        serving traffic alone."""
+        with self._lock:
+            if warm:
+                if not hit:
+                    self.warm_compiles += 1
+            elif hit:
+                self.cache_hits += 1
+            else:
+                self.cache_misses += 1
+
+    def note_slot_depth(self, depth: int) -> None:
+        """In-flight slot count observed at one launch."""
+        with self._lock:
+            self.sum_inflight += depth
+            self.n_inflight_obs += 1
+            if depth > self.max_inflight:
+                self.max_inflight = depth
 
     def observe_insert_batch(self, *, n_keys: int, admitted: int,
                              t_start: float, t_end: float) -> None:
@@ -140,6 +174,19 @@ class ServiceMetrics:
                 "p99_batch_ms": self.batch_latency.quantile(0.99) * 1e3,
                 "mean_queue_ms": self.queue_latency.mean * 1e3,
                 "p99_queue_ms": self.queue_latency.quantile(0.99) * 1e3,
+                "mean_request_ms": self.request_latency.mean * 1e3,
+                "p50_request_ms": self.request_latency.quantile(0.50) * 1e3,
+                "p99_request_ms": self.request_latency.quantile(0.99) * 1e3,
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "cache_hit_rate": (
+                    self.cache_hits / (self.cache_hits + self.cache_misses)
+                    if self.cache_hits + self.cache_misses else 0.0),
+                "warm_compiles": self.warm_compiles,
+                "mean_inflight_slots": (self.sum_inflight
+                                        / self.n_inflight_obs
+                                        if self.n_inflight_obs else 0.0),
+                "max_inflight_slots": self.max_inflight,
                 "insert_batches": self.n_insert_batches,
                 "insert_keys": self.n_insert_keys,
                 "admitted": self.n_admitted,

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core import spec as spec_mod
 from repro.serve.lookup.admission import LookupFuture
+from repro.serve.lookup.executor import AsyncContext, WorkItem
 from repro.serve.lookup.registry import DEFAULT_NAME, Generation
 from repro.serve.lookup.service import LookupService, LookupServiceConfig
 
@@ -124,29 +125,75 @@ class MutableLookupService(LookupService):
 
         return view.lookup, scan_for
 
-    def _apply_inserts(self, run) -> None:
+    def _insert_apply(self, run) -> np.ndarray:
+        """Land one insert run in the delta (host-side, in admission
+        order) and record the write-side metrics; returns the per-key
+        admitted flags.  Shared by both executors — the async dispatch
+        thread applies it at the run's turn, so a later read run in the
+        same batch pins a view that already observes it."""
         keys = (run[0].keys if len(run) == 1
                 else np.concatenate([r.keys for r in run]))
         t0 = time.perf_counter()
-        try:
-            admitted = self.mindex.insert(keys)
-        except BaseException as e:  # noqa: BLE001 — fail the run, not the flusher
-            for r in run:
-                r.future._set_exception(e)
-            return
-        t1 = time.perf_counter()
-        off = 0
-        for r in run:
-            r.future._set_result(admitted[off:off + r.keys.size])
-            off += r.keys.size
+        admitted = self.mindex.insert(keys)
         self.metrics.observe_insert_batch(
             n_keys=keys.size, admitted=int(admitted.sum()),
-            t_start=t0, t_end=t1)
+            t_start=t0, t_end=time.perf_counter())
         self.metrics.set_delta_gauge(
             delta_keys=self.mindex.delta_count,
             threshold=self.mindex.compact_threshold)
         if self.cfg.auto_compact and self.mindex.needs_compaction:
             self._spawn_compaction()
+        return admitted
+
+    def _apply_inserts(self, run) -> None:
+        try:
+            admitted = self._insert_apply(run)
+        except BaseException as e:  # noqa: BLE001 — fail the run, not the flusher
+            for r in run:
+                r.future._set_exception(e)
+            return
+        off = 0
+        for r in run:
+            r.future._set_result(admitted[off:off + r.keys.size])
+            off += r.keys.size
+
+    # -- async executor plumbing (DESIGN.md §13) --------------------------
+    def _async_context(self) -> AsyncContext:
+        """Pin one (generation, delta) view as a cacheable context.  The
+        merged fn takes the padded delta as an ARGUMENT (``bind``), so
+        the cached executable survives insert traffic; the padded delta
+        LENGTH is part of the key — it is a compile-shape axis, and a
+        pow2 pad-boundary crossing is a (correct, observable) miss."""
+        view = self.mindex.view()
+        delta_dev = view.delta.device
+        return AsyncContext(
+            key=(view.generation.version, int(delta_dev.shape[0])),
+            read_fn=view.merged_fn,
+            scan_fn=view.scan_fn,
+            bind=(delta_dev,),
+            sample_key=int(np.asarray(view.generation.data[:1])[0]))
+
+    def _async_work_items(self, batch):
+        """Re-pin PER RUN (the sync `_process_batch` contract): an
+        insert item is applied when the executor reaches it, and the
+        generator resumes with a fresh view for the next run."""
+        for run in self._runs(batch, key=lambda r: r.kind):
+            kind = run[0].kind
+            if kind == "insert":
+                yield WorkItem(kind="insert", group=list(run),
+                               apply_fn=self._insert_apply)
+            else:
+                yield from self._async_items_for_run(
+                    kind, run, self._async_context())
+
+    def _complete_insert_slot(self, slot) -> None:
+        """Resolve a host-ready insert slot in ring order — results were
+        computed at apply time; completion only keeps FIFO semantics."""
+        admitted = slot.host
+        off = 0
+        for r in slot.group:
+            r.future._set_result(admitted[off:off + r.keys.size])
+            off += r.keys.size
 
     # -- compaction ------------------------------------------------------
     def _spawn_compaction(self) -> None:

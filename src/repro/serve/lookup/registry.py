@@ -64,6 +64,18 @@ class IndexRegistry:
         self._lock = threading.Lock()
         self._versions = MonotonicCounter()
         self._current: Dict[str, Generation] = {}
+        self._subscribers: list = []
+
+    def subscribe(self, callback) -> None:
+        """Register ``callback(name, generation)`` to run after every
+        publish (outside the registry lock, on the publishing thread).
+        The executable cache hangs its invalidation-on-swap here: the
+        moment a new generation is visible, stale executables are
+        evicted and a warm-up of the new generation can be scheduled.
+        Callbacks must be cheap or hand off — a publish can come from a
+        compaction thread holding its own locks."""
+        with self._lock:
+            self._subscribers.append(callback)
 
     def current(self, name: str = DEFAULT_NAME) -> Generation:
         with self._lock:
@@ -100,6 +112,9 @@ class IndexRegistry:
         )
         with self._lock:
             self._current[name] = gen
+            subscribers = list(self._subscribers)
+        for cb in subscribers:
+            cb(name, gen)
         return gen
 
     def build_and_publish(self, index, keys: np.ndarray,

@@ -15,13 +15,23 @@ single-device `repro.core` lookup on the same queries.
 Hot-swap: `swap_keys(new_keys)` rebuilds off-thread-safe (outside every
 lock) and publishes atomically; batches in flight complete against the
 generation they were dispatched with — nothing drains, nothing blocks.
+
+Executors (DESIGN.md §13): ``executor="sync"`` is the loop above — the
+bit-exact reference every other path is pinned against.
+``executor="async"`` swaps in the continuous-batching engine
+(`serve.lookup.executor`): a pre-compiled executable cache keyed by
+(generation, kind, batch bucket), a dispatch thread that launches device
+work without blocking on it, and a bounded ring of in-flight slots
+completed in FIFO order — admission and completion overlap the in-flight
+device step, and steady-state p99 is bounded by kernel time instead of
+Python dispatch + first-touch compiles.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -29,8 +39,10 @@ from repro.core import spec as spec_mod
 from repro.serve.common import MonotonicCounter
 from repro.serve.lookup.admission import LookupFuture, MicroBatcher
 from repro.serve.lookup.dispatch import PAD_QUANTUM, ShardedDispatcher
+from repro.serve.lookup.executor import (AsyncContext, AsyncExecutor,
+                                         ExecutableCache, WorkItem)
 from repro.serve.lookup.metrics import ServiceMetrics
-from repro.serve.lookup.registry import Generation, IndexRegistry
+from repro.serve.lookup.registry import DEFAULT_NAME, Generation, IndexRegistry
 
 
 #: One source of truth for the serving-default hyperparameters — the
@@ -65,6 +77,17 @@ class LookupServiceConfig:
     #: set, the spec wins WHOLESALE (the four field-wise knobs are
     #: ignored) — one serializable value addresses the whole build.
     spec: Optional[spec_mod.IndexSpec] = None
+    #: Dispatch engine: "sync" (serial take -> block -> complete, the
+    #: bit-exact reference) or "async" (continuous batching — executable
+    #: cache + double buffering + slot ring, DESIGN.md §13).
+    executor: str = "sync"
+    slots: int = 4                          # async in-flight slot ring depth
+    #: Batch buckets the async warm-up pre-compiles; () = every pow2
+    #: bucket from pad_quantum up to padded(max_batch) — the shapes
+    #: steady traffic actually dispatches.
+    warm_buckets: Tuple[int, ...] = ()
+    #: Scan lengths warmed alongside (each is a compile-shape axis).
+    warm_scan_lengths: Tuple[int, ...] = ()
 
     def resolved_spec(self) -> spec_mod.IndexSpec:
         """The validated `IndexSpec` every build of this service uses."""
@@ -80,6 +103,10 @@ class LookupService:
                  config: Optional[LookupServiceConfig] = None,
                  mesh=None, counter: Optional[MonotonicCounter] = None):
         self.cfg = config if config is not None else LookupServiceConfig()
+        if self.cfg.executor not in ("sync", "async"):
+            raise ValueError(
+                f"executor must be 'sync' or 'async', "
+                f"got {self.cfg.executor!r}")
         self.registry = IndexRegistry()
         self.dispatcher = ShardedDispatcher(
             mesh=mesh, pad_quantum=self.cfg.pad_quantum)
@@ -92,6 +119,15 @@ class LookupService:
         self._dispatch_lock = threading.Lock()   # one batch at a time
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._warm_thread: Optional[threading.Thread] = None
+        self.exec_cache = ExecutableCache(metrics=self.metrics)
+        self._async = (AsyncExecutor(self, slots=self.cfg.slots)
+                       if self.cfg.executor == "async" else None)
+        if self._async is not None:
+            # invalidation-on-swap rides the publish event itself, so
+            # compaction rebuilds (which publish without going through
+            # swap_keys) evict stale executables too
+            self.registry.subscribe(self._on_publish)
         self.swap_keys(keys)
 
     # -- index lifecycle -------------------------------------------------
@@ -240,12 +276,113 @@ class LookupService:
             m = int(group[0].aux)
             self._complete_run(group, lambda m=m: scan_for(m))
 
+    # -- async executor plumbing (DESIGN.md §13) --------------------------
+    def _async_context(self) -> AsyncContext:
+        """Pin one generation as an executable-cache-addressable context:
+        the async analogue of `_pin_context` (same snapshot semantics —
+        a hot-swap lands between batches, never inside one)."""
+        gen = self.registry.current()
+        return AsyncContext(
+            key=(gen.version,),
+            read_fn=gen.fn,
+            scan_fn=gen.scan_fn,
+            bind=(),
+            sample_key=int(np.asarray(gen.data[:1])[0]))
+
+    def _async_work_items(self, batch):
+        """Lazily yield `WorkItem`s for one taken batch, in admission
+        order — the async twin of `_process_batch`, with the context
+        pinned ONCE for the whole batch (the mutable subclass re-pins
+        per run and interleaves insert application)."""
+        ctx = self._async_context()
+        for run in self._runs(batch, key=lambda r: r.kind):
+            yield from self._async_items_for_run(run[0].kind, run, ctx)
+
+    def _async_items_for_run(self, kind, run, ctx):
+        if kind == "scan":
+            # scan length is a compile-shape axis: split like the sync path
+            for group in self._runs(run, key=lambda r: r.aux):
+                yield WorkItem(kind="scan", group=list(group), ctx=ctx,
+                               aux=int(group[0].aux))
+        else:
+            yield WorkItem(kind="read", group=list(run), ctx=ctx)
+
+    def _complete_insert_slot(self, slot) -> None:
+        """Resolve a host-ready insert slot (mutable service only)."""
+        raise NotImplementedError(
+            "insert completion on a read-only service")
+
+    def _resolved_warm_buckets(self):
+        if self.cfg.warm_buckets:
+            return tuple(sorted({self.dispatcher.padded_size(int(b))
+                                 for b in self.cfg.warm_buckets}))
+        # every pow2 bucket steady traffic can dispatch at: quantum ..
+        # padded(max_batch) — log2-many executables, compiled once
+        buckets, b = [], self.dispatcher.padded_size(1)
+        top = self.dispatcher.padded_size(self.cfg.max_batch)
+        while b < top:
+            buckets.append(b)
+            b = self.dispatcher.padded_size(b + 1)
+        buckets.append(top)
+        return tuple(buckets)
+
+    def warm_now(self) -> int:
+        """Synchronously prime the executable cache for the CURRENT
+        generation over the configured warm buckets; returns the number
+        of warmed cells.  `start()` runs this before serving; hot-swaps
+        re-run it off-thread (`_on_publish`)."""
+        if self._async is None:
+            return 0
+        ctx = self._async_context()
+        return self.exec_cache.warmup(
+            ctx, self._resolved_warm_buckets(), self.dispatcher,
+            scan_lengths=self.cfg.warm_scan_lengths)
+
+    def _on_publish(self, name: str, gen: Generation) -> None:
+        """Registry publish hook (async executor only): evict stale
+        generations' executables and re-warm the new one WITHOUT
+        blocking the publisher (a compaction thread may be mid-swap
+        holding its own locks — warming there would deadlock)."""
+        if name != DEFAULT_NAME:
+            return
+        self.exec_cache.invalidate(keep_version=gen.version)
+        if self._thread is None:
+            # not serving: start() warms synchronously before the first
+            # dispatch, and a never-started service must not leave a
+            # compile thread behind at interpreter teardown
+            return
+        t = threading.Thread(target=self._warm_retry,
+                             name="lookup-warmer", daemon=True)
+        self._warm_thread = t
+        t.start()
+
+    def _warm_retry(self) -> None:
+        """Warm the current context, tolerating construction windows
+        (the mutable service publishes its first generation before its
+        view pointer exists — retry briefly, then give up quietly: a
+        missed warm only costs one first-touch compile per bucket)."""
+        deadline = time.perf_counter() + 5.0
+        while True:
+            try:
+                self.warm_now()
+                return
+            except Exception:   # noqa: BLE001 — warm-up is best-effort
+                if time.perf_counter() >= deadline:
+                    return
+                time.sleep(0.005)
+
     def flush(self) -> bool:
         """Dispatch one due batch if any (size or deadline trigger)."""
+        if self._async is not None:
+            return self._async.flush()
         return self._dispatch_once(force=False)
 
     def drain(self) -> int:
-        """Force-dispatch until the queue is empty; returns batch count."""
+        """Force-dispatch until the queue is empty; returns batch count.
+        In async mode this also waits for every in-flight slot, so no
+        future is left unresolved when it returns."""
+        if self._async is not None:
+            return self._async.drain()
         n = 0
         while self._dispatch_once(force=True):
             n += 1
@@ -255,11 +392,18 @@ class LookupService:
     def start(self) -> "LookupService":
         if self._thread is not None:
             return self
+        if self._async is not None:
+            # prime the common buckets BEFORE serving: steady-state
+            # dispatch then never traces or compiles (§13 warm-up)
+            self.warm_now()
+            self._thread = self._async.start()
+            return self
         self._stop.clear()
 
         def _loop():
             while not self._stop.is_set():
-                if self.batcher.wait_ready(timeout=0.05):
+                if self.batcher.wait_ready(timeout=5.0,
+                                           until=self._stop.is_set):
                     self._dispatch_once(force=False)
             self.drain()   # complete everything admitted before stop()
 
@@ -274,7 +418,15 @@ class LookupService:
         (submit + flush/drain), or via a later start()."""
         if self._thread is None:
             return
+        if self._async is not None:
+            self._async.stop()
+            self._thread = None
+            w = self._warm_thread
+            if w is not None and w.is_alive():
+                w.join()   # never strand a compile thread past stop()
+            return
         self._stop.set()
+        self.batcher.wake()
         self._thread.join()
         self._thread = None
         self.drain()       # anything admitted during the join window

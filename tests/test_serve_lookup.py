@@ -56,7 +56,9 @@ def test_batcher_flushes_on_deadline():
     b.submit(np.arange(5, dtype=np.uint64) + 1)
     assert not b.ready()                   # far below size trigger
     assert b.take() == []
-    assert b.wait_ready(timeout=2.0)       # deadline fires
+    # generous timeout: the 50ms deadline firing is the assertion, the
+    # timeout only bounds a BROKEN wait — never a tight wall-clock race
+    assert b.wait_ready(timeout=30.0)      # deadline fires
     batch = b.take()
     assert len(batch) == 1 and batch[0].keys.size == 5
     assert b.pending_keys == 0
@@ -70,12 +72,21 @@ def test_batcher_oversize_request_not_split():
 
 
 def test_batcher_wait_ready_wakes_on_submit():
+    # a submit() while wait_ready blocks must wake it via the size
+    # trigger: with a 60s deadline and a 30s timeout, returning True AT
+    # ALL proves the wake-up — no wall-clock elapsed assertion needed
     b = MicroBatcher(max_batch=4, deadline_s=60.0)
-    t0 = time.perf_counter()
-    threading.Timer(
-        0.05, lambda: b.submit(np.arange(4, dtype=np.uint64) + 1)).start()
-    assert b.wait_ready(timeout=5.0)       # size trigger, not the 60s deadline
-    assert time.perf_counter() - t0 < 2.0
+    waiting = threading.Event()
+
+    def feed():
+        waiting.wait(5.0)
+        b.submit(np.arange(4, dtype=np.uint64) + 1)
+
+    t = threading.Thread(target=feed)
+    t.start()
+    waiting.set()
+    assert b.wait_ready(timeout=30.0)      # size trigger, not the deadline
+    t.join()
 
 
 def test_batcher_rejects_empty():
@@ -128,8 +139,16 @@ def test_batcher_token_bucket_refills_at_rate():
     b = MicroBatcher(max_batch=10_000, deadline_s=60.0,
                      client_rate=(10_000.0, 64))
     b.submit(np.arange(64, dtype=np.uint64) + 1, client="a")  # bucket empty
-    time.sleep(0.02)                       # ~200 tokens refilled, cap 64
-    b.submit(np.arange(64, dtype=np.uint64) + 1, client="a")
+    # retry until the refill admits the burst (at 10k tokens/s this is
+    # ~6.4ms away); the deadline only bounds a bucket that never refills
+    deadline = time.perf_counter() + 30.0
+    while True:
+        try:
+            b.submit(np.arange(64, dtype=np.uint64) + 1, client="a")
+            break
+        except ClientBacklogFull:
+            assert time.perf_counter() < deadline, "bucket never refilled"
+            time.sleep(0.001)
     assert b.pending_requests == 2
 
 
@@ -194,13 +213,14 @@ def test_service_fifo_completion_per_client(amzn_service):
 
 
 def test_service_deadline_flush_completes_small_request(amzn_service):
+    # 7 keys << max_batch=512: ONLY the deadline trigger can flush this,
+    # so `result` returning (inside any generous timeout) is the whole
+    # assertion — a wall-clock elapsed bound would just re-measure
+    # scheduler noise
     keys, svc = amzn_service
     with svc:
-        t0 = time.perf_counter()
-        pos = svc.submit(keys[:7]).result(timeout=10.0)   # 7 keys << 512
-        dt = time.perf_counter() - t0
+        pos = svc.submit(keys[:7]).result(timeout=30.0)   # 7 keys << 512
     np.testing.assert_array_equal(pos, np.arange(7))
-    assert dt < 5.0                       # deadline (5ms) flushed it, not size
 
 
 def test_service_results_bit_identical_vs_core_all_datasets(datasets, queries):
@@ -322,6 +342,8 @@ def test_service_hot_swap_under_load():
                1: (keys_new, base.lower_bound_oracle)}
     bad = []
 
+    midstream = threading.Event()   # client is provably mid-stream here
+
     def client():
         rng = np.random.default_rng(0)
         for i in range(60):
@@ -334,11 +356,15 @@ def test_service_hot_swap_under_load():
                      if v_before <= v <= v_after)
             if not ok:
                 bad.append(i)
+            if i == 20:
+                midstream.set()
 
     with svc:
         t = threading.Thread(target=client)
         t.start()
-        time.sleep(0.05)
+        # event handshake, not a sleep: the swap lands after request 20
+        # completed and before request 60 — mid-stream BY CONSTRUCTION
+        assert midstream.wait(timeout=60.0)
         svc.swap_keys(keys_new)        # no drain, mid-stream
         t.join(timeout=60.0)
     assert not t.is_alive()

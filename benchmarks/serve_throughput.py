@@ -29,7 +29,17 @@ async executor exists to shrink.
 
 ``--smoke`` runs one tiny sync-vs-async cell and exits nonzero if the
 async positions diverge from sync by one bit or the warmed executable
-cache never hits — the CI tripwire for the §13 parity contract.
+cache never hits — the CI tripwire for the §13 parity contract.  The
+smoke also exercises the §14 observability contract: it re-runs the
+async cell with tracing on, reconciles the trace-derived request p99
+against the metrics-snapshot p99 (they must land within one histogram
+bucket — same requests, two independent recording paths), measures the
+tracing throughput tax, and writes the cell's metrics snapshot to
+``benchmarks/results/serve_smoke_metrics.json``.  With
+``--check-baseline`` that snapshot is additionally held against the
+committed ``benchmarks/baselines/serve_smoke_baseline.json`` with
+generous tolerance bands — the perf tripwire that catches a serve-path
+p99 regression before it merges.
 """
 from __future__ import annotations
 
@@ -66,7 +76,8 @@ N_SERVE_Q = int(os.environ.get("SERVE_Q", min(C.N_QUERIES, 10_000)))
 
 
 def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
-              backend: str = "jnp", executor: str = "sync"):
+              backend: str = "jnp", executor: str = "sync",
+              trace: bool = False):
     import jax.numpy as jnp
     from repro.serve.lookup import LookupService, LookupServiceConfig
 
@@ -76,7 +87,8 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
     t0 = time.perf_counter()
     svc = LookupService(keys, LookupServiceConfig(
         spec=spec.replace(backend=backend),
-        max_batch=max_batch, deadline_ms=2.0, executor=executor))
+        max_batch=max_batch, deadline_ms=2.0, executor=executor,
+        trace=trace))
     build_s = time.perf_counter() - t0
 
     chunks = [q[i:i + request_keys] for i in range(0, len(q), request_keys)]
@@ -121,7 +133,7 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
         "batches": snap["batches"],
         "verified_vs_core": verified,
     }
-    return row, got
+    return row, got, svc
 
 
 def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
@@ -129,12 +141,20 @@ def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
     """Sweep the service.  ``spec`` pins ONE declarative IndexSpec for
     every cell; ``autotune`` (a byte budget) lets the `spec.Tuner` pick
     the per-dataset spec+backend instead of the serving defaults;
-    ``executor`` picks one engine or "both" (the §13 A/B columns)."""
+    ``executor`` picks one engine or "both" (the §13 A/B columns).
+
+    Every row also carries the §14.3 stage-decomposition columns —
+    measured predict vs bounded-search ns/lookup for the cell's
+    generation, the `analysis.cost_ns` proxy split along the same seam,
+    and their ratio — profiled once per (dataset, spec, backend) and
+    shared across the batch/executor cells serving that generation."""
+    from repro.obs.profiler import profile_generation
     from repro.serve.lookup import default_spec
 
     backend = backend or C.BACKEND
     executors = EXECUTORS if executor == "both" else [executor]
     rows = []
+    stage_cache = {}
     for ds in DATASETS:
         if spec is not None:
             cells = [spec]
@@ -149,13 +169,26 @@ def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
                                 and spec is None) else backend
             for max_batch, request_keys in BATCH_POINTS:
                 for ex in executors:
-                    r, _ = _run_cell(ds, sp, max_batch, request_keys,
-                                     backend=be, executor=ex)
+                    r, _, svc = _run_cell(ds, sp, max_batch, request_keys,
+                                          backend=be, executor=ex)
+                    sk = (ds, sp.index, be)
+                    if sk not in stage_cache:
+                        prof = profile_generation(
+                            svc.generation, C.queries(ds)[:N_SERVE_Q])
+                        stage_cache[sk] = {
+                            k: (round(v, 2) if isinstance(v, float) else v)
+                            for k, v in prof.items()
+                            if k.startswith(("stage_", "proxy_",
+                                             "cost_model", "avg_width"))}
+                    r.update(stage_cache[sk])
                     rows.append(r)
                     print(f"{ds:5s} {r['index']:12s} {ex:5s} "
                           f"batch={max_batch:5d} "
                           f"{r['lookups_per_s']/1e3:9.1f} klookups/s  "
                           f"p99_req={r['p99_request_ms']:8.2f}ms  "
+                          f"predict/search="
+                          f"{r['stage_predict_ns']:.0f}/"
+                          f"{r['stage_search_ns']:.0f}ns  "
                           f"hit={r['cache_hit_rate']:.2f}  occ="
                           f"{r['mean_occupancy']:.2f}  "
                           f"verified={r['verified_vs_core']}", flush=True)
@@ -195,20 +228,104 @@ def _print_speedups(rows):
               flush=True)
 
 
-def smoke(backend=None, executor: str = "async") -> None:
+#: committed perf baseline + the snapshot each smoke writes beside the
+#: other benchmark results
+BASELINE_PATH = "benchmarks/baselines/serve_smoke_baseline.json"
+SMOKE_METRICS_PATH = "benchmarks/results/serve_smoke_metrics.json"
+
+#: tolerance bands for --check-baseline.  Deliberately generous: CI
+#: containers vary widely in CPU quality, and the tripwire exists to
+#: catch order-of-magnitude serve-path regressions (an accidental
+#: recompile per batch, a lock on the hot path), not 10% noise.
+BASELINE_MAX_P99_RATIO = 5.0       # p99_request_ms may grow at most 5x
+BASELINE_MIN_THROUGHPUT_RATIO = 0.2   # lookups/s may drop at most 5x
+
+#: hard ceiling for the tracing throughput tax in the smoke — the §14
+#: target is <5%, but one tiny cell is noisy, so the EXIT threshold
+#: leaves headroom for scheduler jitter while still catching a
+#: pathological recorder (e.g. one that serializes the dispatch path).
+TRACE_OVERHEAD_EXIT_FRAC = 0.50
+
+
+def _reconcile_trace(svc, row) -> dict:
+    """§14 acceptance: the request p99 derived from raw trace spans and
+    the p99 the metrics histogram reports must land within ONE histogram
+    bucket of each other — same requests, two independent recording
+    paths (deque of spans vs log-bucketed counts)."""
+    from repro.obs.trace import SpanRecorder
+    from repro.obs.windows import LatencyHistogram
+
+    trace = svc.recorder.to_chrome()
+    lats = list(SpanRecorder.request_latencies_s(trace).values())
+    if not lats:
+        raise SystemExit("traced smoke produced no request spans")
+    trace_p99_s = float(np.quantile(np.asarray(lats), 0.99,
+                                    method="higher"))
+    hist = LatencyHistogram()
+    b_trace = hist.bucket_index(trace_p99_s)
+    b_snap = hist.bucket_index(row["p99_request_ms"] / 1e3)
+    print(f"  trace p99 {trace_p99_s*1e3:.2f}ms (bucket {b_trace})  vs  "
+          f"snapshot p99 {row['p99_request_ms']:.2f}ms (bucket {b_snap})  "
+          f"over {len(lats)} request spans", flush=True)
+    if abs(b_trace - b_snap) > 1:
+        raise SystemExit(
+            f"trace-derived p99 ({trace_p99_s*1e3:.2f}ms, bucket "
+            f"{b_trace}) and snapshot p99 ({row['p99_request_ms']:.2f}ms, "
+            f"bucket {b_snap}) disagree by more than one histogram bucket")
+    return {"trace_p99_ms": trace_p99_s * 1e3,
+            "trace_p99_bucket": b_trace, "snapshot_p99_bucket": b_snap,
+            "trace_request_spans": len(lats)}
+
+
+def _check_baseline(metrics: dict) -> None:
+    """Hold this smoke's snapshot against the committed baseline; exit
+    nonzero on a p99 or throughput regression beyond the bands."""
+    if not os.path.exists(BASELINE_PATH):
+        raise SystemExit(f"--check-baseline: no baseline at "
+                         f"{BASELINE_PATH} (run a smoke and commit "
+                         f"{SMOKE_METRICS_PATH} there)")
+    with open(BASELINE_PATH) as f:
+        base = json.load(f)
+    p99, b_p99 = metrics["p99_request_ms"], base["p99_request_ms"]
+    tput, b_tput = metrics["lookups_per_s"], base["lookups_per_s"]
+    p99_ratio = p99 / b_p99 if b_p99 else float("inf")
+    tput_ratio = tput / b_tput if b_tput else 0.0
+    print(f"  baseline: p99 {p99:.2f}ms vs {b_p99:.2f}ms "
+          f"({p99_ratio:.2f}x, limit {BASELINE_MAX_P99_RATIO:.1f}x); "
+          f"throughput {tput/1e3:.1f} vs {b_tput/1e3:.1f} klookups/s "
+          f"({tput_ratio:.2f}x, floor {BASELINE_MIN_THROUGHPUT_RATIO:.1f}x)",
+          flush=True)
+    fails = []
+    if p99_ratio > BASELINE_MAX_P99_RATIO:
+        fails.append(f"p99_request_ms regressed {p99_ratio:.1f}x over "
+                     f"baseline (limit {BASELINE_MAX_P99_RATIO:.1f}x)")
+    if tput_ratio < BASELINE_MIN_THROUGHPUT_RATIO:
+        fails.append(f"lookups_per_s fell to {tput_ratio:.2f}x of "
+                     f"baseline (floor {BASELINE_MIN_THROUGHPUT_RATIO:.1f}x)")
+    if fails:
+        raise SystemExit("perf baseline tripwire: " + "; ".join(fails))
+    print("  baseline check ok", flush=True)
+
+
+def smoke(backend=None, executor: str = "async",
+          check_baseline: bool = False) -> None:
     """One tiny A/B cell, CI tripwire semantics: exit NONZERO when
     (a) the async executor's positions differ from the sync executor's
     by even one bit, (b) the warmed executable cache never hits under
-    serving traffic, or (c) either engine diverges from the direct
-    `repro.core` lookup."""
+    serving traffic, (c) either engine diverges from the direct
+    `repro.core` lookup, (d) a traced re-run's span-derived request p99
+    disagrees with the metrics-snapshot p99 by more than one histogram
+    bucket, (e) tracing costs a pathological fraction of throughput, or
+    (f) with ``check_baseline``, the snapshot regresses past the
+    committed baseline's tolerance bands."""
     from repro.serve.lookup import default_spec
 
     backend = backend or C.BACKEND
     sp = default_spec("rmi")
-    row_s, got_s = _run_cell("amzn", sp, 512, 32, backend=backend,
-                             executor="sync")
-    row_a, got_a = _run_cell("amzn", sp, 512, 32, backend=backend,
-                             executor=executor)
+    row_s, got_s, _ = _run_cell("amzn", sp, 512, 32, backend=backend,
+                                executor="sync")
+    row_a, got_a, _ = _run_cell("amzn", sp, 512, 32, backend=backend,
+                                executor=executor)
     for tag, row in (("sync", row_s), (executor, row_a)):
         print(f"  {tag:5s}: p99_req={row['p99_request_ms']:8.2f}ms  "
               f"p99_queue={row['p99_queue_ms']:8.2f}ms  "
@@ -222,9 +339,58 @@ def smoke(backend=None, executor: str = "async") -> None:
         raise SystemExit("service positions diverged from repro.core")
     if executor == "async" and row_a["cache_hit_rate"] <= 0.0:
         raise SystemExit("async executable cache NEVER hit after warm-up")
+
+    # -- §14 observability contract: traced re-run of the same cell ----
+    # The first async cell pays every process-level JAX first-touch, so
+    # compare traced vs untraced on WARM re-runs (both benefit equally
+    # from the in-process compile caches primed above).
+    row_w, got_w, _ = _run_cell("amzn", sp, 512, 32, backend=backend,
+                                executor=executor)
+    row_t, got_t, svc_t = _run_cell("amzn", sp, 512, 32, backend=backend,
+                                    executor=executor, trace=True)
+    if not (np.array_equal(got_a, got_t) and np.array_equal(got_a, got_w)):
+        raise SystemExit("tracing changed the results — recorder is not "
+                         "observation-only")
+    recon = _reconcile_trace(svc_t, row_t)
+    overhead = (1.0 - row_t["lookups_per_s"] / row_w["lookups_per_s"]
+                if row_w["lookups_per_s"] else 0.0)
+    print(f"  tracing overhead: {overhead*100:+.1f}% throughput "
+          f"({row_w['lookups_per_s']/1e3:.1f} -> "
+          f"{row_t['lookups_per_s']/1e3:.1f} klookups/s; "
+          f"target <5%, exit threshold "
+          f"{TRACE_OVERHEAD_EXIT_FRAC*100:.0f}%)", flush=True)
+    if overhead > TRACE_OVERHEAD_EXIT_FRAC:
+        raise SystemExit(f"tracing cost {overhead*100:.0f}% of throughput "
+                         f"— recorder is on the critical path")
+
+    # snapshot the WARM untraced cell — the steady-state number the
+    # committed baseline pins, free of process-level first-touch cost
+    metrics = {
+        "cell": {"dataset": "amzn", "index": sp.index, "max_batch": 512,
+                 "request_keys": 32, "executor": executor,
+                 "backend": backend, "n_queries": row_w["n_queries"]},
+        "lookups_per_s": row_w["lookups_per_s"],
+        "p99_request_ms": row_w["p99_request_ms"],
+        "p99_queue_ms": row_w["p99_queue_ms"],
+        "p99_batch_ms": row_w["p99_batch_ms"],
+        "mean_request_ms": row_w["mean_request_ms"],
+        "cache_hit_rate": row_w["cache_hit_rate"],
+        "trace_overhead_frac": round(overhead, 4),
+        **{k: (round(v, 4) if isinstance(v, float) else v)
+           for k, v in recon.items()},
+    }
+    os.makedirs(os.path.dirname(SMOKE_METRICS_PATH), exist_ok=True)
+    with open(SMOKE_METRICS_PATH, "w") as f:
+        json.dump(metrics, f, indent=1)
+    print(f"  wrote {SMOKE_METRICS_PATH}", flush=True)
+    if check_baseline:
+        _check_baseline(metrics)
     print(f"smoke ok: {executor} bit-identical to sync "
           f"({got_s.size} positions), cache hit rate "
-          f"{row_a['cache_hit_rate']:.2f}", flush=True)
+          f"{row_a['cache_hit_rate']:.2f}, trace p99 reconciled "
+          f"(|Δbucket| = "
+          f"{abs(recon['trace_p99_bucket'] - recon['snapshot_p99_bucket'])})",
+          flush=True)
 
 
 if __name__ == "__main__":
@@ -232,10 +398,15 @@ if __name__ == "__main__":
     _ap = argparse.ArgumentParser(add_help=False)
     _ap.add_argument("--executor", choices=("sync", "async", "both"),
                      default="both")
-    _ex = _ap.parse_known_args()[0].executor
+    _ap.add_argument("--check-baseline", action="store_true",
+                     help="hold the smoke metrics snapshot against "
+                          f"{BASELINE_PATH} (nonzero exit on regression)")
+    _opts = _ap.parse_known_args()[0]
+    _ex = _opts.executor
     if _ns.smoke:
         smoke(backend=_ns.backend,
-              executor="async" if _ex == "both" else _ex)
+              executor="async" if _ex == "both" else _ex,
+              check_baseline=_opts.check_baseline)
     else:
         run(backend=_ns.backend, spec=_ns.spec, autotune=_ns.autotune,
             executor=_ex)

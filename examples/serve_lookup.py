@@ -8,8 +8,17 @@ a warmed executable cache, launch-without-blocking double buffering, and
 a bounded in-flight slot ring — hot-swap invalidates and re-warms the
 cache without pausing admission.
 
+The run is fully observed (DESIGN.md §14): tracing is on, so every
+request becomes a span from admission to completion and the hot-swap
+shows up as lifecycle spans; the windowed metrics report the p99 *of the
+trailing window* (with an SLO target and error-budget burn) next to the
+lifetime aggregate; and the whole run is written out as a Chrome-trace
+JSON you can open in chrome://tracing or https://ui.perfetto.dev.
+
     PYTHONPATH=src python examples/serve_lookup.py
 """
+import os
+import tempfile
 import threading
 import time
 
@@ -24,11 +33,13 @@ N_KEYS = 100_000
 N_CLIENTS = 4
 REQUESTS_PER_CLIENT = 40
 KEYS_PER_REQUEST = 64
+SLO_P99_MS = 25.0
 
 keys = sosd.generate("amzn", N_KEYS, seed=1)
 svc = LookupService(keys, LookupServiceConfig(
     spec=IndexSpec("rmi", dict(branching=2048)),
-    max_batch=1024, deadline_ms=1.0, executor="async"))
+    max_batch=1024, deadline_ms=1.0, executor="async",
+    trace=True, slo_p99_ms=SLO_P99_MS))
 
 errors = []
 
@@ -86,5 +97,21 @@ print(f"  executable cache: hit rate {snap['cache_hit_rate']:.2f} "
       f"{snap['warm_compiles']} warm compiles); "
       f"in-flight slots mean {snap['mean_inflight_slots']:.2f} / "
       f"max {snap['max_inflight_slots']}")
+
+# windowed view (§14.2): the p99 of the trailing window, not of all time,
+# plus the SLO error-budget burn a latency-aware operator would page on
+w = svc.metrics.windowed(window_s=10.0)
+print(f"  windowed({w['window_s']:.0f}s): p50 {w['p50_ms']:.2f}ms / "
+      f"p99 {w['p99_ms']:.2f}ms, {w['lookups_per_s']/1e3:.1f} klookups/s; "
+      f"SLO p99<{SLO_P99_MS:.0f}ms: {w['slo_violations']} violations, "
+      f"budget burn {w['slo_budget_burn']:.2f}")
+
+# the full run as a Chrome trace: request spans (admission -> completion),
+# launches/finalizes, and the hot-swap's build+publish lifecycle spans
+trace_path = os.path.join(tempfile.gettempdir(), "serve_lookup_trace.json")
+svc.recorder.save(trace_path)
+print(f"  trace: {len(svc.recorder)} spans ({svc.recorder.n_dropped} "
+      f"dropped) -> {trace_path} (chrome://tracing, ui.perfetto.dev)")
+
 print(f"  wrong answers: {len(errors)}")
 assert not errors

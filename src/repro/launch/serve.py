@@ -10,6 +10,18 @@ micro-batching, sharded fused dispatch — DESIGN.md §9):
 
     PYTHONPATH=src python -m repro.launch.serve --mode lookup \
         --dataset amzn --index rmi --requests 200 --keys-per-request 64
+
+Ops surface (DESIGN.md §14): ``--metrics-port`` starts the stdlib HTTP
+exporter (GET /metrics for Prometheus text, /metrics.json for the
+structured lifetime+windowed document, /trace.json for the live Chrome
+trace), ``--trace-out`` records the whole run and writes a Chrome-trace
+JSON openable in chrome://tracing or Perfetto, ``--metrics-jsonl``
+appends periodic metrics snapshots for offline analysis, and
+``--slo-p99-ms`` arms the windowed error-budget tracking:
+
+    PYTHONPATH=src python -m repro.launch.serve --mode lookup \
+        --metrics-port 9100 --trace-out /tmp/lookup_trace.json \
+        --slo-p99-ms 20
 """
 from __future__ import annotations
 
@@ -47,9 +59,12 @@ def run_tokens(args):
 
 
 def run_lookup(args):
+    import contextlib
+
     from repro.core import base
     from repro.core.spec import IndexSpec
     from repro.data import sosd
+    from repro.obs.export import JsonlMetricsLogger, MetricsServer
     from repro.serve.lookup import (LookupService, LookupServiceConfig,
                                     default_spec)
 
@@ -59,18 +74,30 @@ def run_lookup(args):
           else default_spec(args.index))
     svc = LookupService(keys, LookupServiceConfig(
         spec=sp, max_batch=args.max_batch,
-        deadline_ms=args.deadline_ms, executor=args.executor))
+        deadline_ms=args.deadline_ms, executor=args.executor,
+        trace=bool(args.trace_out), slo_p99_ms=args.slo_p99_ms))
     print(f"serving spec: {svc.generation.spec.to_json()} "
           f"(executor={args.executor})")
     q = sosd.make_queries(keys, args.requests * args.keys_per_request, seed=2)
 
-    t0 = time.time()
-    with svc:
-        futs = [svc.submit(q[i * args.keys_per_request:
-                             (i + 1) * args.keys_per_request])
-                for i in range(args.requests)]
-        outs = [f.result(timeout=120.0) for f in futs]
-    dt = time.time() - t0
+    with contextlib.ExitStack() as stack:
+        if args.metrics_port is not None:
+            server = stack.enter_context(
+                MetricsServer(svc, port=args.metrics_port,
+                              window_s=args.window_s))
+            print(f"metrics: http://127.0.0.1:{server.port}/metrics "
+                  f"(+ /metrics.json, /trace.json)")
+        if args.metrics_jsonl:
+            stack.enter_context(JsonlMetricsLogger(
+                svc, args.metrics_jsonl, interval_s=1.0,
+                window_s=args.window_s))
+        t0 = time.time()
+        with svc:
+            futs = [svc.submit(q[i * args.keys_per_request:
+                                 (i + 1) * args.keys_per_request])
+                    for i in range(args.requests)]
+            outs = [f.result(timeout=120.0) for f in futs]
+        dt = time.time() - t0
 
     got = np.concatenate(outs)
     exact = bool(np.array_equal(got, base.lower_bound_oracle(keys, q)))
@@ -84,6 +111,22 @@ def run_lookup(args):
           f"queue p99 {snap['p99_queue_ms']:.2f}ms, "
           f"request p99 {snap['p99_request_ms']:.2f}ms, "
           f"cache hit rate {snap['cache_hit_rate']:.2f}")
+    w = svc.metrics.windowed(args.window_s)
+    line = (f"windowed({w['window_s']:.0f}s): p50 {w['p50_ms']:.2f}ms, "
+            f"p99 {w['p99_ms']:.2f}ms, "
+            f"{w['lookups_per_s']/1e3:.1f} klookups/s")
+    if args.slo_p99_ms is not None:
+        line += (f", SLO p99<{args.slo_p99_ms:.0f}ms: "
+                 f"{w['slo_violations']} violations, "
+                 f"budget burn {w['slo_budget_burn']:.2f}")
+    print(line)
+    if args.trace_out:
+        svc.recorder.save(args.trace_out)
+        print(f"wrote Chrome trace ({len(svc.recorder)} spans, "
+              f"{svc.recorder.n_dropped} dropped) to {args.trace_out} — "
+              f"open in chrome://tracing or https://ui.perfetto.dev")
+    if args.metrics_jsonl:
+        print(f"wrote metrics JSONL to {args.metrics_jsonl}")
     print(f"exact vs lower_bound oracle: {exact}")
 
 
@@ -112,6 +155,23 @@ def main():
                     help="lookup dispatch engine (DESIGN.md §13): the "
                          "continuous-batching async executor (default) "
                          "or the serial sync reference loop")
+    # ops surface (lookup mode, DESIGN.md §14)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="start the HTTP metrics endpoint on this port "
+                         "(0 = ephemeral): /metrics Prometheus text, "
+                         "/metrics.json, /trace.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="record request/lifecycle spans and write a "
+                         "Chrome-trace JSON here (chrome://tracing, "
+                         "Perfetto)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append one metrics snapshot per second to this "
+                         "JSONL file (offline analysis)")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="p99 latency SLO target: windowed snapshots "
+                         "report violations + error-budget burn")
+    ap.add_argument("--window-s", type=float, default=10.0,
+                    help="rolling window the ops surfaces report over")
     args = ap.parse_args()
 
     if args.mode == "lookup":

@@ -1,0 +1,32 @@
+"""`repro.obs` — the unified observability layer (DESIGN.md §14).
+
+Four pieces, each importable without the serve stack (the serve stack
+imports *us*):
+
+  windows    log-spaced `LatencyHistogram` (the one histogram class every
+             metrics surface shares) and `WindowedMetrics` — a ring of
+             per-time-slot sub-histograms merged at read, giving
+             `snapshot(window_s=...)` plus SLO tracking (p99 target,
+             error-budget burn rate).  The interface a p99-aware Tuner
+             objective consumes.
+  trace      `SpanRecorder` — a low-overhead bounded-ring structured span
+             recorder with per-request ids propagated from admission
+             through executor launch/completion, exported as
+             Chrome-trace/Perfetto JSON (`to_chrome`).
+  profiler   per-plan-stage timing: decompose measured lookup time into
+             predict vs bounded-search per (index, backend) and report it
+             against the `analysis.cost_ns` proxy — the paper's §4.3
+             explanatory decomposition on live plans.
+  export     Prometheus-text + JSON exporters, a stdlib HTTP metrics
+             endpoint (`MetricsServer`), and periodic JSONL metrics
+             logging (`JsonlMetricsLogger`).
+"""
+from repro.obs.trace import SpanRecorder, maybe_span
+from repro.obs.windows import LatencyHistogram, WindowedMetrics
+
+__all__ = [
+    "LatencyHistogram",
+    "SpanRecorder",
+    "WindowedMetrics",
+    "maybe_span",
+]

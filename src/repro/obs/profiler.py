@@ -1,0 +1,125 @@
+"""Per-plan-stage timing: predict vs bounded-search (DESIGN.md §14.3).
+
+The source paper's §4.3 contribution is *explanatory*: lookup latency
+decomposes into model inference (data movement through index state) and
+last-mile probes, and no single metric explains both.  The plan IR makes
+the two stages first-class (`BoundsStage.predict` -> backend last-mile),
+so we can measure them apart on live plans instead of inferring:
+
+  measured   time a jitted predict-only program and the full plan
+             executable on the same query batch; the difference is the
+             bounded-search stage (both best-of-k wall clock, blocked
+             until ready).
+  proxy      `repro.core.analysis.describe`/`cost_ns` split along the
+             same seam: the last-mile term is ``probes/bytes/flops``
+             attributable to the bounded search, the remainder is model
+             inference.
+
+`profile_generation` reports both per (index, backend) cell — the
+benchmark's stage-decomposition columns — so the measured split can be
+held against the cost model the Tuner budgets with (`cost_model_ratio`:
+measured total / proxy total).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = ["profile_plan", "profile_generation", "proxy_decomposition",
+           "time_fn_s"]
+
+
+def time_fn_s(fn, *args, repeats: int = 3) -> float:
+    """Best-of-k wall time of a jitted callable, seconds (compile+warm
+    excluded — same regime as `benchmarks._common.time_lookup`)."""
+    import jax
+
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def profile_plan(plan, q, backend: str = "jnp", interpret: bool = False,
+                 repeats: int = 3) -> Dict[str, float]:
+    """Measured per-lookup stage decomposition of one `LookupPlan`.
+
+    Returns ns/lookup for the predict stage, the bounded-search stage
+    (total - predict, clamped at 0 — jit may fuse across the seam, in
+    which case the stages are reported as inseparable), and the total.
+    Point-only plans have no search stage by construction.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    q = jnp.asarray(np.asarray(q, dtype=np.uint64))
+    m = int(q.shape[0])
+    full = plan.compile(backend=backend, interpret=interpret)
+    total_s = time_fn_s(full, q, repeats=repeats)
+    if plan.point_only:
+        predict_s = total_s
+    else:
+        state, predict = plan.bounds.state, plan.bounds.predict
+        predict_fn = jax.jit(lambda qq: predict(state, qq))
+        predict_s = time_fn_s(predict_fn, q, repeats=repeats)
+    total_ns = total_s / m * 1e9
+    predict_ns = min(predict_s / m * 1e9, total_ns)
+    return {
+        "backend": backend,
+        "n_queries": m,
+        "stage_predict_ns": predict_ns,
+        "stage_search_ns": max(0.0, total_ns - predict_ns),
+        "stage_total_ns": total_ns,
+        "stage_predict_frac": predict_ns / total_ns if total_ns else 0.0,
+    }
+
+
+def proxy_decomposition(build, widths: np.ndarray) -> Dict[str, float]:
+    """The `analysis.cost_ns` proxy split along the same predict/search
+    seam: the last-mile term is the probe/byte/flop cost `describe`
+    attributes to the bounded search, the remainder model inference."""
+    from repro.core import analysis
+
+    metrics = analysis.describe(build, np.asarray(widths))
+    total = analysis.cost_ns(metrics)
+    lm = int(math.ceil(math.log2(max(2.0, metrics["avg_width"]))))
+    w = analysis.COST_NS_WEIGHTS
+    # describe() adds per last-mile probe: 1 probe round, 8 bytes, 2 flops
+    search = lm * (w["probes"] + 8 * w["bytes_touched"] + 2 * w["flops"])
+    search = min(search, total)
+    return {
+        "proxy_predict_ns": total - search,
+        "proxy_search_ns": search,
+        "proxy_total_ns": total,
+        "avg_width": float(metrics["avg_width"]),
+    }
+
+
+def profile_generation(gen, q, repeats: int = 3,
+                       backend: Optional[str] = None) -> Dict[str, float]:
+    """Stage decomposition of one serving `Generation`: measured split
+    for the backend it serves with, proxy split from its build, and the
+    measured/proxy ratio that calibrates the Tuner's cost model."""
+    import jax
+
+    backend = gen.backend if backend is None else backend
+    row = profile_plan(gen.plan, q, backend=backend, repeats=repeats)
+    row["index"] = gen.plan.name
+    if not gen.plan.point_only:
+        import jax.numpy as jnp
+
+        state, predict = gen.plan.bounds.state, gen.plan.bounds.predict
+        qd = jnp.asarray(np.asarray(q, dtype=np.uint64))
+        lo, hi = jax.jit(lambda qq: predict(state, qq))(qd)
+        widths = np.asarray(hi, np.int64) - np.asarray(lo, np.int64) + 1
+        row.update(proxy_decomposition(gen.build, widths))
+        row["cost_model_ratio"] = (
+            row["stage_total_ns"] / row["proxy_total_ns"]
+            if row["proxy_total_ns"] else 0.0)
+    return row

@@ -95,7 +95,8 @@ class MicroBatcher:
     def __init__(self, max_batch: int, deadline_s: float,
                  counter: Optional[MonotonicCounter] = None,
                  max_client_keys: Optional[int] = None,
-                 client_rate: Optional[Tuple[float, float]] = None):
+                 client_rate: Optional[Tuple[float, float]] = None,
+                 recorder=None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if max_client_keys is not None and max_client_keys < 1:
@@ -109,6 +110,9 @@ class MicroBatcher:
         self.deadline_s = float(deadline_s)
         self.max_client_keys = max_client_keys
         self.client_rate = client_rate
+        #: optional `repro.obs.trace.SpanRecorder`: admission instants
+        #: (one per rid — the trace's request-id origin) and rejections
+        self.recorder = recorder
         self._counter = counter if counter is not None else MonotonicCounter()
         self._pending: "collections.deque[PendingRequest]" = collections.deque()
         self._n_keys = 0
@@ -141,28 +145,40 @@ class MicroBatcher:
         fut = LookupFuture(rid, keys.size)
         req = PendingRequest(rid, keys, fut, time.perf_counter(),
                              kind=kind, aux=int(aux), client=client)
-        with self._cond:
-            if client is not None:
-                # backlog cap first (checks without consuming), then the
-                # token bucket (consumes) — a cap rejection must not burn
-                # tokens, and a rate rejection must not count as backlog.
-                if self.max_client_keys is not None:
-                    held = self._client_keys.get(client, 0)
-                    if held + keys.size > self.max_client_keys:
-                        raise ClientBacklogFull(
-                            f"client {client!r} holds {held} pending keys; "
-                            f"+{keys.size} exceeds cap {self.max_client_keys}")
-                if self.client_rate is not None:
-                    # timestamp read INSIDE the lock: refills stay monotone
-                    # under concurrent submits of the same client
-                    self._check_rate_locked(client, keys.size,
-                                            time.perf_counter())
-                if self.max_client_keys is not None:
-                    self._client_keys[client] = (
-                        self._client_keys.get(client, 0) + keys.size)
-            self._pending.append(req)
-            self._n_keys += keys.size
-            self._cond.notify_all()
+        try:
+            with self._cond:
+                if client is not None:
+                    # backlog cap first (checks without consuming), then the
+                    # token bucket (consumes) — a cap rejection must not burn
+                    # tokens, and a rate rejection must not count as backlog.
+                    if self.max_client_keys is not None:
+                        held = self._client_keys.get(client, 0)
+                        if held + keys.size > self.max_client_keys:
+                            raise ClientBacklogFull(
+                                f"client {client!r} holds {held} pending keys; "
+                                f"+{keys.size} exceeds cap {self.max_client_keys}")
+                    if self.client_rate is not None:
+                        # timestamp read INSIDE the lock: refills stay monotone
+                        # under concurrent submits of the same client
+                        self._check_rate_locked(client, keys.size,
+                                                time.perf_counter())
+                    if self.max_client_keys is not None:
+                        self._client_keys[client] = (
+                            self._client_keys.get(client, 0) + keys.size)
+                self._pending.append(req)
+                self._n_keys += keys.size
+                self._cond.notify_all()
+        except ClientBacklogFull:
+            if self.recorder is not None:
+                self.recorder.instant("admission_rejected", cat="admission",
+                                      rid=rid, kind=kind,
+                                      n_keys=int(keys.size))
+            raise
+        if self.recorder is not None:
+            # outside the condition lock: tracing must not stretch the
+            # admission critical section every submitter contends on
+            self.recorder.instant("admit", cat="admission", t=req.t_submit,
+                                  rid=rid, kind=kind, n_keys=int(keys.size))
         return rid, fut
 
     def pending_keys_of(self, client) -> int:

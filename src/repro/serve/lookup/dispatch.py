@@ -55,12 +55,18 @@ def data_axis_mesh():
 class ShardedDispatcher:
     """Pads, places, and runs query batches over the data mesh axis."""
 
-    def __init__(self, mesh=None, pad_quantum: int = PAD_QUANTUM):
+    def __init__(self, mesh=None, pad_quantum: int = PAD_QUANTUM,
+                 recorder=None):
         self.mesh = data_axis_mesh() if mesh is None else mesh
         self.pad_quantum = int(pad_quantum)
         # one rule walk for everyone: the dist layer owns the policy
         self.n_shards = SH.dispatch_groups(mesh=self.mesh,
                                            rules=SH.ACT_RULES)
+        #: optional `repro.obs.trace.SpanRecorder`: the synchronous
+        #: dispatch path splits into a pad+place span (host-side data
+        #: movement) and a device span (launch + block), so a slow batch
+        #: names which half it spent its time in.
+        self.recorder = recorder
 
     def padded_size(self, m: int) -> int:
         """Next power-of-two >= max(m, quantum), then up to a multiple of
@@ -114,8 +120,14 @@ class ShardedDispatcher:
         come back as a tuple of host arrays, each sliced to the real
         batch size along axis 0.
         """
+        from repro.obs.trace import maybe_span
+
         if isinstance(fn, plan_mod.LookupPlan):
             fn = fn.compile(backend=backend)
         keys = np.asarray(keys, dtype=np.uint64)
-        qj, _p = self.pad_and_place(keys)
-        return self.finalize(fn(qj), keys.size)
+        with maybe_span(self.recorder, "pad_place", cat="serve",
+                        n_keys=int(keys.size)):
+            qj, p = self.pad_and_place(keys)
+        with maybe_span(self.recorder, "device", cat="serve",
+                        padded=int(p), n_shards=self.n_shards):
+            return self.finalize(fn(qj), keys.size)

@@ -50,6 +50,8 @@ from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.trace import maybe_span
+
 __all__ = ["AsyncContext", "AsyncExecutor", "ExecutableCache", "WorkItem"]
 
 
@@ -121,13 +123,17 @@ class ExecutableCache:
     their executables, so eviction never races a running batch.
     """
 
-    def __init__(self, metrics=None):
+    def __init__(self, metrics=None, recorder=None):
         self._mu = threading.Lock()
         self._exes: dict = {}
         self.hits = 0
         self.misses = 0
         self.warm_compiles = 0
         self.metrics = metrics
+        #: optional `repro.obs.trace.SpanRecorder`: every build becomes
+        #: a "compile" span — the p99 outlier the cache exists to hide
+        #: is visible (and attributable) in the exported trace.
+        self.recorder = recorder
 
     # -- stats -----------------------------------------------------------
     def counters(self) -> Tuple[int, int]:
@@ -189,7 +195,10 @@ class ExecutableCache:
             else:
                 self.misses += 1
         if exe is None:
-            exe = self._build(make_fn(), bucket, ctx.bind, dispatcher)
+            with maybe_span(self.recorder, "compile", cat="compile",
+                            kind=kind, aux=int(aux), bucket=int(bucket),
+                            version=ctx.key[0], warm=bool(warm)):
+                exe = self._build(make_fn(), bucket, ctx.bind, dispatcher)
             with self._mu:
                 self._exes[key] = exe
         if self.metrics is not None:
@@ -370,6 +379,15 @@ class AsyncExecutor:
             self._put(_Slot(group=group, kind=item.kind, error=e,
                             t_submit_oldest=t_oldest, t_launch=t0))
             return
+        rec = svc.recorder
+        if rec is not None:
+            # one span per launched slot, carrying the (contiguous,
+            # admission-ordered) rid range it holds — the link between
+            # request spans and the device work that served them
+            rec.add("launch", t0, time.perf_counter(), cat="serve",
+                    kind=item.kind, padded=int(padded),
+                    n_keys=int(keys.size), n_requests=len(group),
+                    rid_first=group[0].rid, rid_last=group[-1].rid)
         self._put(_Slot(group=group, kind=item.kind, out=out, m=keys.size,
                         padded=padded, t_submit_oldest=t_oldest,
                         t_launch=t0))
@@ -402,6 +420,7 @@ class AsyncExecutor:
             elif slot.is_insert:
                 svc._complete_insert_slot(slot)
             else:
+                t_wait = time.perf_counter()
                 try:
                     out = svc.dispatcher.finalize(slot.out, slot.m)
                 except BaseException as e:   # noqa: BLE001 — device failure
@@ -416,11 +435,24 @@ class AsyncExecutor:
                         tuple(o[off:end] for o in out)
                         if isinstance(out, tuple) else out[off:end])
                     off = end
+                rec = svc.recorder
+                if rec is not None:
+                    rec.add("finalize", t_wait, t_end, cat="serve",
+                            kind=slot.kind, n_keys=slot.m,
+                            rid_first=slot.group[0].rid,
+                            rid_last=slot.group[-1].rid)
+                    for r in slot.group:
+                        rec.request(r.rid, kind=r.kind,
+                                    n_keys=r.keys.size,
+                                    t_submit=r.t_submit,
+                                    t_launch=slot.t_launch, t_end=t_end)
                 svc.metrics.observe_batch(
                     n_keys=slot.m, padded=slot.padded,
                     n_requests=len(slot.group),
                     t_oldest_submit=slot.t_submit_oldest,
-                    t_start=slot.t_launch, t_end=t_end)
+                    t_start=slot.t_launch, t_end=t_end,
+                    per_request=[(r.t_submit, r.keys.size)
+                                 for r in slot.group])
         finally:
             with self._inflight_cv:
                 self._inflight -= 1

@@ -1,76 +1,50 @@
-"""Per-batch serving metrics (DESIGN.md §9.4, §10.5).
+"""Per-batch serving metrics (DESIGN.md §9.4, §10.5, §14).
 
-Everything the throughput benchmark and the ops story need, with no
-dependencies: a log-spaced latency histogram (fixed memory, exact enough
-for p50/p99 at 5% bucket resolution), batch occupancy (real keys /
-padded dispatch width — the price of the deadline trigger), and
-aggregate lookups/sec over the serving window.  The mutable service
-adds write-side observations: insert batches/admissions, the current
-delta occupancy gauge (delta keys / compaction threshold), and
-compaction count + latency.
+Everything the throughput benchmark and the ops story need: log-spaced
+latency histograms (`repro.obs.windows.LatencyHistogram` — O(log n)
+bisect record, since this runs under the metrics lock on every batch
+completion), batch occupancy (real keys / padded dispatch width — the
+price of the deadline trigger), and aggregate lookups/sec over the
+serving window.  The mutable service adds write-side observations:
+insert batches/admissions, the current delta occupancy gauge (delta
+keys / compaction threshold), and compaction count + latency.
+
+Beyond the lifetime aggregates, every request latency also lands in a
+`repro.obs.windows.WindowedMetrics` ring, so `windowed(window_s=...)`
+answers "what is the p99 *now*" — the §14 rolling-window surface (with
+optional SLO target + error-budget burn) that a mid-run regression
+cannot hide from and that a p99-aware Tuner objective consumes.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, Optional, Sequence, Tuple
 
+from repro.obs.windows import LatencyHistogram, WindowedMetrics
 
-class LatencyHistogram:
-    """Log-spaced histogram over [1us, ~84s), growth factor 1.05."""
-
-    def __init__(self, lo_s: float = 1e-6, factor: float = 1.05,
-                 n_buckets: int = 360):
-        self.lo_s = lo_s
-        self.factor = factor
-        self.bounds: List[float] = []
-        b = lo_s
-        for _ in range(n_buckets):
-            self.bounds.append(b)
-            b *= factor
-        self.counts = [0] * (n_buckets + 1)
-        self.n = 0
-        self.total_s = 0.0
-
-    def record(self, seconds: float) -> None:
-        i = 0
-        for i, ub in enumerate(self.bounds):
-            if seconds < ub:
-                break
-        else:
-            i = len(self.bounds)
-        self.counts[i] += 1
-        self.n += 1
-        self.total_s += seconds
-
-    def quantile(self, q: float) -> float:
-        """Upper bound of the bucket holding the q-quantile (0 if empty)."""
-        if self.n == 0:
-            return 0.0
-        target = q * self.n
-        acc = 0
-        for i, c in enumerate(self.counts):
-            acc += c
-            if acc >= target:
-                return self.bounds[i] if i < len(self.bounds) else float("inf")
-        return self.bounds[-1]
-
-    @property
-    def mean(self) -> float:
-        return self.total_s / self.n if self.n else 0.0
+__all__ = ["LatencyHistogram", "ServiceMetrics", "WindowedMetrics"]
 
 
 class ServiceMetrics:
     """Aggregated per-batch observations; `snapshot()` is the read API."""
 
-    def __init__(self):
+    def __init__(self, slo_p99_ms: Optional[float] = None,
+                 window_slot_s: float = 0.5, window_slots: int = 240):
         self._lock = threading.Lock()
         self.batch_latency = LatencyHistogram()
         self.queue_latency = LatencyHistogram()
-        #: end-to-end: oldest submit -> futures resolved.  With the async
+        #: end-to-end: submit -> future resolved.  With the async
         #: executor, p99 decomposes as queue (admission->dispatch) +
         #: batch (dispatch->complete) ~= request — the §13 observability
-        #: contract that makes a p99 regression attributable.
+        #: contract that makes a p99 regression attributable.  Recorded
+        #: PER REQUEST when the dispatch path passes `per_request`
+        #: observations (both executors do), per batch otherwise.
         self.request_latency = LatencyHistogram()
+        #: rolling-window request latencies (§14.2): same observations
+        #: as `request_latency`, sliced by completion time.
+        self.windows = WindowedMetrics(slot_s=window_slot_s,
+                                       n_slots=window_slots,
+                                       slo_p99_ms=slo_p99_ms)
         self.n_batches = 0
         self.n_keys = 0
         self.n_requests = 0
@@ -97,7 +71,14 @@ class ServiceMetrics:
 
     def observe_batch(self, *, n_keys: int, padded: int, n_requests: int,
                       t_oldest_submit: float, t_start: float,
-                      t_end: float) -> None:
+                      t_end: float,
+                      per_request: Optional[Sequence[Tuple[float, int]]] = None
+                      ) -> None:
+        """One completed dispatch.  ``per_request`` carries the batch's
+        ``(t_submit, n_keys)`` per request: request latency is then
+        recorded per request (exactly what the trace's request spans
+        hold, so trace-derived and histogram p99 reconcile) instead of
+        once per batch at the oldest submit."""
         with self._lock:
             self.n_batches += 1
             self.n_keys += n_keys
@@ -105,7 +86,14 @@ class ServiceMetrics:
             self.sum_occupancy += n_keys / max(padded, 1)
             self.batch_latency.record(t_end - t_start)
             self.queue_latency.record(t_start - t_oldest_submit)
-            self.request_latency.record(t_end - t_oldest_submit)
+            if per_request:
+                for t_submit, nk in per_request:
+                    self.request_latency.record(t_end - t_submit)
+                    self.windows.record(t_end - t_submit, units=nk, t=t_end)
+            else:
+                self.request_latency.record(t_end - t_oldest_submit)
+                self.windows.record(t_end - t_oldest_submit, units=n_keys,
+                                    t=t_end)
             if self.t_first is None:
                 self.t_first = t_start
             self.t_last = t_end
@@ -158,10 +146,24 @@ class ServiceMetrics:
             self.delta_keys = int(delta_keys)
             self.delta_threshold = int(threshold)
 
+    def windowed(self, window_s: float = 10.0) -> Dict[str, float]:
+        """Rolling-window request-latency snapshot (§14.2): quantiles,
+        key rate, and SLO budget burn over the trailing ``window_s`` —
+        the read surface a live p99 regression cannot hide from."""
+        snap = self.windows.snapshot(window_s)
+        snap["lookups_per_s"] = snap.pop("units_per_s")
+        snap["lookups"] = snap.pop("units")
+        return snap
+
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
+            # the serving window spans ANY observation — insert-only
+            # traffic sets t_first/t_last through observe_insert_batch
+            # and must not read as a zero-length window
             window = ((self.t_last - self.t_first)
-                      if self.n_batches and self.t_last > self.t_first else 0.0)
+                      if self.t_first is not None
+                      and self.t_last is not None
+                      and self.t_last > self.t_first else 0.0)
             return {
                 "batches": self.n_batches,
                 "requests": self.n_requests,
@@ -177,6 +179,9 @@ class ServiceMetrics:
                 "mean_request_ms": self.request_latency.mean * 1e3,
                 "p50_request_ms": self.request_latency.quantile(0.50) * 1e3,
                 "p99_request_ms": self.request_latency.quantile(0.99) * 1e3,
+                "slo_p99_target_ms": (self.windows.slo_p99_ms
+                                      if self.windows.slo_p99_ms is not None
+                                      else 0.0),
                 "cache_hits": self.cache_hits,
                 "cache_misses": self.cache_misses,
                 "cache_hit_rate": (
@@ -189,6 +194,8 @@ class ServiceMetrics:
                 "max_inflight_slots": self.max_inflight,
                 "insert_batches": self.n_insert_batches,
                 "insert_keys": self.n_insert_keys,
+                "inserts_per_s": (self.n_insert_keys / window
+                                  if window else 0.0),
                 "admitted": self.n_admitted,
                 "mean_insert_ms": self.insert_latency.mean * 1e3,
                 "compactions": self.n_compactions,

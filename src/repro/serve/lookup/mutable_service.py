@@ -29,6 +29,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import spec as spec_mod
+from repro.obs.trace import maybe_span
 from repro.serve.lookup.admission import LookupFuture
 from repro.serve.lookup.executor import AsyncContext, WorkItem
 from repro.serve.lookup.registry import DEFAULT_NAME, Generation
@@ -146,6 +147,7 @@ class MutableLookupService(LookupService):
         return admitted
 
     def _apply_inserts(self, run) -> None:
+        t0 = time.perf_counter()
         try:
             admitted = self._insert_apply(run)
         except BaseException as e:  # noqa: BLE001 — fail the run, not the flusher
@@ -156,6 +158,13 @@ class MutableLookupService(LookupService):
         for r in run:
             r.future._set_result(admitted[off:off + r.keys.size])
             off += r.keys.size
+        if self.recorder is not None:
+            t_end = time.perf_counter()
+            for r in run:
+                self.recorder.request(r.rid, kind="insert",
+                                      n_keys=r.keys.size,
+                                      t_submit=r.t_submit,
+                                      t_launch=t0, t_end=t_end)
 
     # -- async executor plumbing (DESIGN.md §13) --------------------------
     def _async_context(self) -> AsyncContext:
@@ -194,6 +203,13 @@ class MutableLookupService(LookupService):
         for r in slot.group:
             r.future._set_result(admitted[off:off + r.keys.size])
             off += r.keys.size
+        if self.recorder is not None:
+            t_end = time.perf_counter()
+            for r in slot.group:
+                self.recorder.request(r.rid, kind="insert",
+                                      n_keys=r.keys.size,
+                                      t_submit=r.t_submit,
+                                      t_launch=slot.t_launch, t_end=t_end)
 
     # -- compaction ------------------------------------------------------
     def _spawn_compaction(self) -> None:
@@ -212,7 +228,9 @@ class MutableLookupService(LookupService):
     def _compact_and_record(self, reraise: bool = False) -> Optional[Generation]:
         t0 = time.perf_counter()
         try:
-            gen = self.mindex.compact()
+            with maybe_span(self.recorder, "compaction", cat="lifecycle",
+                            delta_keys=int(self.mindex.delta_count)):
+                gen = self.mindex.compact()
         except BaseException as e:  # noqa: BLE001 — observable, not thread-fatal
             self.metrics.observe_compaction_failure()
             self.last_compaction_error = e

@@ -29,6 +29,7 @@ import numpy as np
 from repro.core import base
 from repro.core import spec as spec_mod
 from repro.core.plan import LookupPlan
+from repro.obs.trace import maybe_span
 from repro.serve.common import MonotonicCounter
 from repro.serve.lookup.dispatch import make_plan
 
@@ -65,6 +66,11 @@ class IndexRegistry:
         self._versions = MonotonicCounter()
         self._current: Dict[str, Generation] = {}
         self._subscribers: list = []
+        #: optional `repro.obs.trace.SpanRecorder` (set by the owning
+        #: service): hot-swap builds and publish instants become
+        #: lifecycle spans, so a latency blip during a swap is visually
+        #: attributable in the exported trace.
+        self.recorder = None
 
     def subscribe(self, callback) -> None:
         """Register ``callback(name, generation)`` to run after every
@@ -113,6 +119,10 @@ class IndexRegistry:
         with self._lock:
             self._current[name] = gen
             subscribers = list(self._subscribers)
+        if self.recorder is not None:
+            self.recorder.instant("publish", cat="lifecycle", reg_name=name,
+                                  version=gen.version, index=gen.plan.name,
+                                  n_keys=gen.n_keys)
         for cb in subscribers:
             cb(name, gen)
         return gen
@@ -134,7 +144,9 @@ class IndexRegistry:
         sp = spec_mod.coerce(index, hyper, backend=backend,
                              last_mile=last_mile)
         keys = np.asarray(keys, dtype=np.uint64)
-        build = spec_mod.build(sp, keys)
-        data = jnp.asarray(keys)
+        with maybe_span(self.recorder, "index_build", cat="lifecycle",
+                        reg_name=name, index=sp.index, n_keys=int(keys.size)):
+            build = spec_mod.build(sp, keys)
+            data = jnp.asarray(keys)
         return self.publish(build, data, name=name, last_mile=sp.last_mile,
                             backend=sp.backend, spec=sp)

@@ -36,6 +36,7 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core import spec as spec_mod
+from repro.obs.trace import SpanRecorder, maybe_span
 from repro.serve.common import MonotonicCounter
 from repro.serve.lookup.admission import LookupFuture, MicroBatcher
 from repro.serve.lookup.dispatch import PAD_QUANTUM, ShardedDispatcher
@@ -88,6 +89,22 @@ class LookupServiceConfig:
     warm_buckets: Tuple[int, ...] = ()
     #: Scan lengths warmed alongside (each is a compile-shape axis).
     warm_scan_lengths: Tuple[int, ...] = ()
+    #: Observability (DESIGN.md §14).  ``trace`` turns on the structured
+    #: span recorder (bounded ring of ``trace_capacity`` spans: per-
+    #: request ids from admission through launch/completion, plus
+    #: compile/hot-swap/warm-up/compaction lifecycle spans) exported as
+    #: Chrome-trace JSON via ``service.recorder.to_chrome()``.  Off by
+    #: default: the disabled path costs one ``is None`` check per site.
+    trace: bool = False
+    trace_capacity: int = 65536
+    #: Rolling-window metrics resolution: the ring holds ``window_slots``
+    #: sub-histograms of ``window_slot_s`` seconds each, merged at read
+    #: by ``metrics.windowed(window_s=...)``.
+    window_slot_s: float = 0.5
+    window_slots: int = 240
+    #: Optional p99 SLO target: request latencies above it burn error
+    #: budget, reported per window (`slo_budget_burn`).
+    slo_p99_ms: Optional[float] = None
 
     def resolved_spec(self) -> spec_mod.IndexSpec:
         """The validated `IndexSpec` every build of this service uses."""
@@ -107,20 +124,31 @@ class LookupService:
             raise ValueError(
                 f"executor must be 'sync' or 'async', "
                 f"got {self.cfg.executor!r}")
+        #: §14 span recorder, or None when tracing is off — every
+        #: instrumentation site on the serve path shares this one object
+        self.recorder = (SpanRecorder(self.cfg.trace_capacity)
+                         if self.cfg.trace else None)
         self.registry = IndexRegistry()
+        self.registry.recorder = self.recorder
         self.dispatcher = ShardedDispatcher(
-            mesh=mesh, pad_quantum=self.cfg.pad_quantum)
-        self.metrics = ServiceMetrics()
+            mesh=mesh, pad_quantum=self.cfg.pad_quantum,
+            recorder=self.recorder)
+        self.metrics = ServiceMetrics(
+            slo_p99_ms=self.cfg.slo_p99_ms,
+            window_slot_s=self.cfg.window_slot_s,
+            window_slots=self.cfg.window_slots)
         self.batcher = MicroBatcher(
             self.cfg.max_batch, self.cfg.deadline_ms / 1e3,
             counter=counter if counter is not None else MonotonicCounter(),
             max_client_keys=self.cfg.max_client_keys,
-            client_rate=self.cfg.client_rate)
+            client_rate=self.cfg.client_rate,
+            recorder=self.recorder)
         self._dispatch_lock = threading.Lock()   # one batch at a time
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._warm_thread: Optional[threading.Thread] = None
-        self.exec_cache = ExecutableCache(metrics=self.metrics)
+        self.exec_cache = ExecutableCache(metrics=self.metrics,
+                                          recorder=self.recorder)
         self._async = (AsyncExecutor(self, slots=self.cfg.slots)
                        if self.cfg.executor == "async" else None)
         if self._async is not None:
@@ -257,12 +285,19 @@ class LookupService:
             r.future._set_result(tuple(o[off:end] for o in out)
                                  if isinstance(out, tuple) else out[off:end])
             off = end
+        if self.recorder is not None:
+            for r in group:
+                self.recorder.request(r.rid, kind=r.kind,
+                                      n_keys=r.keys.size,
+                                      t_submit=r.t_submit,
+                                      t_launch=t0, t_end=t1)
         self.metrics.observe_batch(
             n_keys=keys.size,
             padded=self.dispatcher.padded_size(keys.size),
             n_requests=len(group),
             t_oldest_submit=group[0].t_submit,
-            t_start=t0, t_end=t1)
+            t_start=t0, t_end=t1,
+            per_request=[(r.t_submit, r.keys.size) for r in group])
 
     def _dispatch_reads(self, batch, lookup_fn) -> None:
         self._complete_run(batch, lambda: lookup_fn)
@@ -334,9 +369,12 @@ class LookupService:
         if self._async is None:
             return 0
         ctx = self._async_context()
-        return self.exec_cache.warmup(
-            ctx, self._resolved_warm_buckets(), self.dispatcher,
-            scan_lengths=self.cfg.warm_scan_lengths)
+        buckets = self._resolved_warm_buckets()
+        with maybe_span(self.recorder, "warmup", cat="lifecycle",
+                        version=ctx.key[0], n_buckets=len(buckets)):
+            return self.exec_cache.warmup(
+                ctx, buckets, self.dispatcher,
+                scan_lengths=self.cfg.warm_scan_lengths)
 
     def _on_publish(self, name: str, gen: Generation) -> None:
         """Registry publish hook (async executor only): evict stale

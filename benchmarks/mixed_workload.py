@@ -12,7 +12,11 @@ emitting one JSON row per cell: ops/sec, admitted inserts, compaction
 count and latency, peak delta occupancy, and ``verified_vs_oracle`` —
 EVERY per-op result (read positions and admitted flags) compared
 against a plain sorted-array `oracle_replay`, which crosses every
-compaction the run performed.  Thresholds are sized so insert-carrying
+compaction the run performed.  Rows also carry the §15 index-health
+columns (``drift_tv`` against the current generation's build
+distribution, ``disp_p99_ratio`` live-vs-build displacement,
+``compaction_debt``, and any ``alerts_firing`` at cell end) — the
+skewed mixes are exactly where the drift detector earns its keep.  Thresholds are sized so insert-carrying
 cells compact at least once; read-only cells pin the zero-write
 regression path.
 
@@ -88,6 +92,9 @@ def _run_cell(ds: str, spec, mix: str, dist: str, n_ops: int,
     verified = bool(np.array_equal(got, expected)) and all(
         np.array_equal(windows[i], exp_windows[i]) for i in exp_windows)
     snap = svc.metrics.snapshot()
+    svc.check_alerts(window_s=3600.0)
+    firing = svc.alerts.firing()
+    h = svc.health_snapshot(window_s=3600.0)
     final_spec = svc.mindex.spec     # tuner may have retuned at compaction
     return {
         "dataset": ds,
@@ -110,6 +117,16 @@ def _run_cell(ds: str, spec, mix: str, dist: str, n_ops: int,
         "n_scan_windows": len(windows),
         "backend": backend,
         "verified_vs_oracle": verified,
+        # §15 index-health columns for the CURRENT (post-compaction)
+        # generation: drift against the rebuilt key distribution, live
+        # vs build-time displacement, and leftover compaction debt
+        "disp_p99": round(h.get("disp_p99", 0.0), 1),
+        "disp_p99_ratio": round(h.get("disp_p99_ratio", 0.0), 3),
+        "bound_utilization_p99": round(
+            h.get("bound_utilization_p99", 0.0), 4),
+        "drift_tv": round(h.get("drift_tv", 0.0), 4),
+        "compaction_debt": round(h.get("compaction_debt", 0.0), 4),
+        "alerts_firing": firing,
     }
 
 
@@ -147,6 +164,7 @@ def run(out_dir: str = "benchmarks/results", n_ops: int = N_OPS,
                       f"compactions={r['compactions']}  "
                       f"admitted={r['admitted']}  "
                       f"retuned={r['retuned']}  "
+                      f"drift={r['drift_tv']:.2f}  "
                       f"verified={r['verified_vs_oracle']}", flush=True)
     path = os.path.join(out_dir, "mixed_workload.json"
                         if autotune is None else

@@ -40,6 +40,14 @@ tracing throughput tax, and writes the cell's metrics snapshot to
 committed ``benchmarks/baselines/serve_smoke_baseline.json`` with
 generous tolerance bands — the perf tripwire that catches a serve-path
 p99 regression before it merges.
+
+The smoke also pins the §15 index-health contract: the instrumented
+lookup path must be bit-identical to the health-off path and cost a
+bounded throughput fraction, the healthy stationary cell must end with
+zero alerts firing, and an injected hot-spot skew shift must raise the
+``workload_drift`` alert — nonzero exit either way it fails.  Sweep
+rows carry the health columns (``disp_p99``, ``bound_utilization_p99``,
+``disp_p99_ratio``, ``drift_tv``, ``mean_last_mile_steps``).
 """
 from __future__ import annotations
 
@@ -77,18 +85,18 @@ N_SERVE_Q = int(os.environ.get("SERVE_Q", min(C.N_QUERIES, 10_000)))
 
 def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
               backend: str = "jnp", executor: str = "sync",
-              trace: bool = False):
+              trace: bool = False, health: bool = True, queries=None):
     import jax.numpy as jnp
     from repro.serve.lookup import LookupService, LookupServiceConfig
 
     keys = C.dataset(ds)
-    q = C.queries(ds)[:N_SERVE_Q]
+    q = C.queries(ds)[:N_SERVE_Q] if queries is None else queries
 
     t0 = time.perf_counter()
     svc = LookupService(keys, LookupServiceConfig(
         spec=spec.replace(backend=backend),
         max_batch=max_batch, deadline_ms=2.0, executor=executor,
-        trace=trace))
+        trace=trace, health=health))
     build_s = time.perf_counter() - t0
 
     chunks = [q[i:i + request_keys] for i in range(0, len(q), request_keys)]
@@ -133,6 +141,18 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
         "batches": snap["batches"],
         "verified_vs_core": verified,
     }
+    # §15 index-health columns (zeros when the cell ran with health off;
+    # the window spans the whole cell — the ring clamps it to capacity)
+    h = svc.health_snapshot(window_s=3600.0)
+    row.update({
+        "disp_p99": round(h.get("disp_p99", 0.0), 1),
+        "bound_utilization_p99": round(
+            h.get("bound_utilization_p99", 0.0), 4),
+        "disp_p99_ratio": round(h.get("disp_p99_ratio", 0.0), 3),
+        "drift_tv": round(h.get("drift_tv", 0.0), 4),
+        "mean_last_mile_steps": round(
+            h.get("mean_last_mile_steps", 0.0), 3),
+    })
     return row, got, svc
 
 
@@ -246,6 +266,11 @@ BASELINE_MIN_THROUGHPUT_RATIO = 0.2   # lookups/s may drop at most 5x
 #: pathological recorder (e.g. one that serializes the dispatch path).
 TRACE_OVERHEAD_EXIT_FRAC = 0.50
 
+#: same shape of ceiling for the §15 health instrumentation tax
+#: (device-reduced stats are O(buckets)/batch on the host; a pathological
+#: implementation that ships O(batch) or forces a sync would blow this).
+HEALTH_OVERHEAD_EXIT_FRAC = 0.50
+
 
 def _reconcile_trace(svc, row) -> dict:
     """§14 acceptance: the request p99 derived from raw trace spans and
@@ -315,9 +340,13 @@ def smoke(backend=None, executor: str = "async",
     serving traffic, (c) either engine diverges from the direct
     `repro.core` lookup, (d) a traced re-run's span-derived request p99
     disagrees with the metrics-snapshot p99 by more than one histogram
-    bucket, (e) tracing costs a pathological fraction of throughput, or
+    bucket, (e) tracing costs a pathological fraction of throughput,
     (f) with ``check_baseline``, the snapshot regresses past the
-    committed baseline's tolerance bands."""
+    committed baseline's tolerance bands, or — the §15 health contract —
+    (g) health instrumentation changes any position bit or costs a
+    pathological throughput fraction, (h) any alert fires on the
+    healthy stationary cell, or (i) an injected hot-spot skew shift
+    fails to raise the ``workload_drift`` alert."""
     from repro.serve.lookup import default_spec
 
     backend = backend or C.BACKEND
@@ -344,8 +373,8 @@ def smoke(backend=None, executor: str = "async",
     # The first async cell pays every process-level JAX first-touch, so
     # compare traced vs untraced on WARM re-runs (both benefit equally
     # from the in-process compile caches primed above).
-    row_w, got_w, _ = _run_cell("amzn", sp, 512, 32, backend=backend,
-                                executor=executor)
+    row_w, got_w, svc_w = _run_cell("amzn", sp, 512, 32, backend=backend,
+                                    executor=executor)
     row_t, got_t, svc_t = _run_cell("amzn", sp, 512, 32, backend=backend,
                                     executor=executor, trace=True)
     if not (np.array_equal(got_a, got_t) and np.array_equal(got_a, got_w)):
@@ -363,6 +392,47 @@ def smoke(backend=None, executor: str = "async",
         raise SystemExit(f"tracing cost {overhead*100:.0f}% of throughput "
                          f"— recorder is on the critical path")
 
+    # -- §15 index-health contract -------------------------------------
+    # (g) instrumentation must be invisible in the results and cheap:
+    # health-off re-run of the same warm cell, bit-compared
+    row_h0, got_h0, _ = _run_cell("amzn", sp, 512, 32, backend=backend,
+                                  executor=executor, health=False)
+    if not np.array_equal(got_a, got_h0):
+        raise SystemExit("health instrumentation changed the results — "
+                         "the instrumented executable is not the same "
+                         "lookup")
+    h_overhead = (1.0 - row_w["lookups_per_s"] / row_h0["lookups_per_s"]
+                  if row_h0["lookups_per_s"] else 0.0)
+    print(f"  health overhead: {h_overhead*100:+.1f}% throughput "
+          f"({row_h0['lookups_per_s']/1e3:.1f} -> "
+          f"{row_w['lookups_per_s']/1e3:.1f} klookups/s; exit threshold "
+          f"{HEALTH_OVERHEAD_EXIT_FRAC*100:.0f}%)", flush=True)
+    if h_overhead > HEALTH_OVERHEAD_EXIT_FRAC:
+        raise SystemExit(f"health stats cost {h_overhead*100:.0f}% of "
+                         f"throughput — the reduction is not O(buckets)")
+    # (h) the healthy stationary cell must be alert-silent
+    svc_w.check_alerts(window_s=3600.0)
+    firing = svc_w.alerts.firing()
+    if firing:
+        raise SystemExit(f"health smoke: alerts firing on a healthy "
+                         f"stationary run: {firing}")
+    print(f"  health: healthy cell silent (disp p99 {row_w['disp_p99']:.0f}"
+          f", {row_w['disp_p99_ratio']:.2f}x build, drift TV "
+          f"{row_w['drift_tv']:.3f})", flush=True)
+    # (i) an injected hot-spot skew shift must raise workload_drift
+    keys = C.dataset("amzn")
+    hot = np.random.default_rng(0).choice(
+        keys[:max(1, len(keys) // 64)], size=row_w["n_queries"])
+    row_d, _, svc_d = _run_cell("amzn", sp, 512, 32, backend=backend,
+                                executor=executor, queries=hot)
+    svc_d.check_alerts(window_s=3600.0)
+    if "workload_drift" not in svc_d.alerts.firing():
+        raise SystemExit(
+            f"injected hot-spot skew did NOT raise workload_drift "
+            f"(drift_tv {row_d['drift_tv']:.3f})")
+    print(f"  health: injected skew raised workload_drift "
+          f"(drift_tv {row_d['drift_tv']:.3f})", flush=True)
+
     # snapshot the WARM untraced cell — the steady-state number the
     # committed baseline pins, free of process-level first-touch cost
     metrics = {
@@ -376,6 +446,11 @@ def smoke(backend=None, executor: str = "async",
         "mean_request_ms": row_w["mean_request_ms"],
         "cache_hit_rate": row_w["cache_hit_rate"],
         "trace_overhead_frac": round(overhead, 4),
+        "health_overhead_frac": round(h_overhead, 4),
+        "disp_p99": row_w["disp_p99"],
+        "bound_utilization_p99": row_w["bound_utilization_p99"],
+        "disp_p99_ratio": row_w["disp_p99_ratio"],
+        "drift_tv": row_w["drift_tv"],
         **{k: (round(v, 4) if isinstance(v, float) else v)
            for k, v in recon.items()},
     }

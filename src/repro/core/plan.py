@@ -10,6 +10,9 @@ an explicit, inspectable value instead of a per-index closure:
                                 |.compile_scan(m)          -> q -> (LB, window)
                                 |.compile_merged()         -> (q, delta) -> merged LB
                                 |.compile_merged_scan(m)   -> (q, delta) -> merged (LB, window)
+                                |.compile_instrumented()   -> (q, n_valid) -> (LB, health stats)
+                                |.compile_instrumented_merged()
+                                                           -> (q, n_valid, delta) -> (LB, stats)
 
 A plan is a `bounds` stage — the index's state pytree, a pure predict
 function ``(state, q) -> (lo, hi)`` with ``hi`` inclusive, and the
@@ -46,9 +49,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import base, search
+from repro.obs.health import HEALTH_DISP_BUCKETS, HEALTH_TRAFFIC_BUCKETS
 
-__all__ = ["BACKENDS", "BoundsStage", "LookupPlan", "lower",
-           "register_fused", "FUSED_LOWERERS"]
+__all__ = ["BACKENDS", "BoundsStage", "LookupPlan", "health_stats_expr",
+           "lower", "pack_health_stats", "register_fused",
+           "FUSED_LOWERERS"]
 
 #: The backend axis every lookup consumer can select on.
 BACKENDS = ("jnp", "pallas")
@@ -97,6 +102,92 @@ def _window_gather(data, pos, m: int):
     oob = idx >= n
     window = jnp.take(data, jnp.clip(idx, 0, n - 1), mode="clip")
     return jnp.where(oob, sentinel, window)
+
+
+def _cum_bucket_hist(vals, edges, valid):
+    """Bucket counts WITHOUT a scatter: count ``vals >= edge`` per edge
+    (a [B, E] comparison reduced over lanes), then difference the
+    cumulative counts.  Identical integer counts to ``.at[idx].add`` —
+    XLA lowers the comparisons to vector code where a CPU/TPU scatter
+    serializes — and invalid lanes are masked out of every column."""
+    c = jnp.sum((vals[:, None] >= edges[None, :]) & valid[:, None],
+                axis=0, dtype=jnp.int32)
+    total = jnp.sum(valid, dtype=jnp.int32)
+    cext = jnp.concatenate([total[None], c, jnp.zeros(1, jnp.int32)])
+    return cext[:-1] - cext[1:]
+
+
+def health_stats_expr(pos, lo, hi, n: int, max_err: int, n_valid,
+                      point_only: bool = False):
+    """Fixed-size device reductions for the health monitor (DESIGN.md §15).
+
+    ``pos`` is the [B] int64 result lanes, ``(lo, hi)`` the bounds-stage
+    window (ignored when ``point_only``), ``n_valid`` a dynamic int32
+    scalar masking out pad lanes so dispatcher padding never pollutes the
+    statistics.  Everything returned is O(buckets): a log2
+    prediction-displacement histogram (bucket 0 = exact hit, bucket j =
+    ``[2^(j-1), 2^j)``, last bucket overflows — `obs.health` owns the
+    geometry), a rank-quantized traffic histogram (bucket ``r*K//n``,
+    realized as cumulative counts against the ceil rank edges — the
+    same integer partition), and scalar sums for mean displacement /
+    bound width / last-mile steps.  Displacement, width, and rank are
+    narrowed to int32 when ``n`` permits — they are bounded by ``n`` —
+    which halves the comparison bandwidth on the hot path.
+    """
+    B = pos.shape[0]
+    K = HEALTH_TRAFFIC_BUCKETS
+    lane = jnp.arange(B, dtype=jnp.int32) < n_valid
+    dt = jnp.int32 if int(n) < 2 ** 31 else jnp.int64
+    if point_only:
+        valid = lane & (pos >= 0)
+        disp = jnp.zeros(B, dt)
+        width = jnp.where(valid, 1, 0).astype(dt)
+        steps = jnp.zeros(B, dt)
+    else:
+        valid = lane
+        lo_n, hi_n = lo.astype(dt), hi.astype(dt)
+        mid = lo_n + (hi_n - lo_n) // 2
+        disp = jnp.where(valid, jnp.abs(pos.astype(dt) - mid), 0)
+        width = jnp.where(valid, hi_n - lo_n + 1, 0)
+        # binary-search trip count over the bound: ceil(log2(width))
+        s_edges = jnp.asarray(
+            [1 << j for j in range(max(1, int(max_err).bit_length()))], dt)
+        steps = jnp.where(
+            valid,
+            jnp.sum(width[:, None] > s_edges[None, :], axis=1,
+                    dtype=jnp.int32), 0).astype(dt)
+    d_edges = jnp.asarray(
+        [1 << j for j in range(HEALTH_DISP_BUCKETS - 1)], dt)
+    disp_hist = _cum_bucket_hist(disp, d_edges, valid)
+    rank = jnp.clip(pos, 0, n - 1).astype(dt)
+    # rank r is in traffic bucket r*K//n  <=>  r >= ceil(j*n/K) for
+    # exactly (bucket index + 1) edges j — cumulative form of the same
+    # partition
+    t_edges = jnp.asarray(
+        [(j * int(n) + K - 1) // K for j in range(1, K)], dt)
+    traffic_hist = _cum_bucket_hist(rank, t_edges, valid)
+    return {
+        "n": jnp.sum(valid.astype(jnp.int32)),
+        "disp_hist": disp_hist,
+        "traffic_hist": traffic_hist,
+        "disp_sum": jnp.sum(disp.astype(jnp.int64)),
+        "disp_max": jnp.max(disp).astype(jnp.int64),
+        "width_sum": jnp.sum(width.astype(jnp.int64)),
+        "steps_sum": jnp.sum(steps.astype(jnp.int64)),
+    }
+
+
+def pack_health_stats(stats) -> Any:
+    """Flatten one stats dict to a single int64 vector (the layout
+    `repro.obs.health.unpack_stats` reverses): 5 scalars, then the two
+    histograms.  One device array per batch means ONE host transfer in
+    the completion path instead of seven."""
+    scalars = jnp.stack([
+        stats["n"].astype(jnp.int64), stats["disp_sum"],
+        stats["disp_max"], stats["width_sum"], stats["steps_sum"]])
+    return jnp.concatenate([scalars,
+                            stats["disp_hist"].astype(jnp.int64),
+                            stats["traffic_hist"].astype(jnp.int64)])
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -224,6 +315,85 @@ class LookupPlan:
 
         return scan
 
+    def _instr_base_expr(self, backend: str, interpret: bool) -> Callable:
+        """``(q, n_valid) -> (LB, lo, hi)`` sharing ONE predict between
+        the search and the stats on the generic jnp path (the fused /
+        pallas paths keep their own lookup and pay a second jnp predict
+        for the stats — still backend-invariant by construction)."""
+        predict, state = self.bounds.predict, self.bounds.state
+        if backend == "jnp":
+            fn = search.SEARCH_FNS[self.last_mile]
+            data, max_err = self.data, self.bounds.max_err
+
+            def base_jnp(q):
+                lo, hi = predict(state, q)
+                pos = fn(data, q, lo, hi, max_err).astype(jnp.int64)
+                return pos, lo, hi
+
+            return base_jnp
+
+        run = self.lb_expr(backend, interpret)
+
+        def base_other(q):
+            pos = run(q)
+            lo, hi = predict(state, q)
+            return pos, lo, hi
+
+        return base_other
+
+    def instrumented_expr(self, backend: str = "jnp",
+                          interpret: bool = False) -> Callable:
+        """``(q, n_valid) -> (LB, packed stats)``: the lookup plus the
+        `health_stats_expr` reduction flattened by `pack_health_stats`.
+
+        The positions come from the SAME ops as the uninstrumented
+        path — bit-identity holds by construction on every backend; the
+        stats derive from the plan's own jnp bounds (not a fused
+        kernel's refit state), so they are backend-invariant too.
+        ``n_valid`` is a dynamic int32 scalar so one compiled program
+        serves every occupancy of a padded batch bucket.
+        """
+        n, max_err = self.n, self.bounds.max_err
+        if self.point_only:
+            run = self.lb_expr(backend, interpret)
+
+            def run_point_instr(q, n_valid):
+                pos = run(q)
+                stats = health_stats_expr(
+                    pos, None, None, n, max_err, n_valid, point_only=True)
+                return pos, pack_health_stats(stats)
+
+            return run_point_instr
+
+        base = self._instr_base_expr(backend, interpret)
+
+        def run_instr(q, n_valid):
+            pos, lo, hi = base(q)
+            stats = health_stats_expr(pos, lo, hi, n, max_err, n_valid)
+            return pos, pack_health_stats(stats)
+
+        return run_instr
+
+    def instrumented_merged_expr(self, backend: str = "jnp",
+                                 interpret: bool = False) -> Callable:
+        """``(q, n_valid, delta_padded) -> (merged LB, packed stats)``.
+        Stats describe the BASE plan (its model is what health tracks);
+        the payload is exactly `merged_expr`'s rank."""
+        if self.point_only:
+            raise ValueError(
+                f"{self.name!r} is point-only: no merged lookups")
+        base = self._instr_base_expr(backend, interpret)
+        n, max_err = self.n, self.bounds.max_err
+
+        def merged_instr(q, n_valid, delta_padded):
+            lb_base, lo, hi = base(q)
+            lb_delta = jnp.searchsorted(delta_padded, q, side="left")
+            stats = health_stats_expr(lb_base, lo, hi, n, max_err, n_valid)
+            return (lb_base + lb_delta.astype(jnp.int64),
+                    pack_health_stats(stats))
+
+        return merged_instr
+
     # -- compiled entry points (cached per plan) ---------------------------
     def _compiled(self, key, make_expr) -> Callable:
         fn = self._cache.get(key)
@@ -262,6 +432,45 @@ class LookupPlan:
         return self._compiled(
             ("merged_scan", int(m), backend, interpret),
             lambda: self.merged_scan_expr(int(m), backend, interpret))
+
+    def compile_instrumented(self, backend: str = "jnp",
+                             interpret: bool = False) -> Callable:
+        return self._compiled(
+            ("instr", backend, interpret),
+            lambda: self.instrumented_expr(backend, interpret))
+
+    def compile_instrumented_merged(self, backend: str = "jnp",
+                                    interpret: bool = False) -> Callable:
+        return self._compiled(
+            ("instr_merged", backend, interpret),
+            lambda: self.instrumented_merged_expr(backend, interpret))
+
+    def build_displacement_quantile(self, q: float = 0.99,
+                                    sample: int = 65536) -> float:
+        """Displacement quantile of the plan's OWN keys: the build-time
+        prediction error level that live traffic is compared against
+        (the `disp_p99_ratio` health key).  For key ``keys[i]`` the true
+        rank is ``i``, so displacement is ``|i - mid(predict(keys[i]))|``
+        — evaluated over an evenly strided sample of up to ``sample``
+        keys and cached per plan (one device eval per generation).
+        Point-only plans have no prediction window: 0."""
+        key = ("build_disp", float(q), int(sample))
+        cached = self._cache.get(key)
+        if cached is not None:
+            return cached
+        if self.point_only or self.n == 0:
+            self._cache[key] = 0.0
+            return 0.0
+        idx = np.linspace(0, self.n - 1,
+                          min(self.n, int(sample))).astype(np.int64)
+        lo, hi = self.bounds.predict(self.bounds.state,
+                                     self.data[jnp.asarray(idx)])
+        lo = np.asarray(lo).astype(np.int64)
+        hi = np.asarray(hi).astype(np.int64)
+        mid = lo + (hi - lo) // 2
+        val = float(np.quantile(np.abs(idx - mid), q))
+        self._cache[key] = val
+        return val
 
     def scan(self, q, m: int, backend: str = "jnp",
              interpret: bool = False):

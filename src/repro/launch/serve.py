@@ -14,14 +14,23 @@ micro-batching, sharded fused dispatch — DESIGN.md §9):
 Ops surface (DESIGN.md §14): ``--metrics-port`` starts the stdlib HTTP
 exporter (GET /metrics for Prometheus text, /metrics.json for the
 structured lifetime+windowed document, /trace.json for the live Chrome
-trace), ``--trace-out`` records the whole run and writes a Chrome-trace
-JSON openable in chrome://tracing or Perfetto, ``--metrics-jsonl``
-appends periodic metrics snapshots for offline analysis, and
-``--slo-p99-ms`` arms the windowed error-budget tracking:
+trace, /health.json + /alerts.json for index health, /healthz for
+liveness), ``--trace-out`` records the whole run and writes a
+Chrome-trace JSON openable in chrome://tracing or Perfetto,
+``--metrics-jsonl`` appends periodic metrics snapshots for offline
+analysis, and ``--slo-p99-ms`` arms the windowed error-budget tracking:
 
     PYTHONPATH=src python -m repro.launch.serve --mode lookup \
         --metrics-port 9100 --trace-out /tmp/lookup_trace.json \
         --slo-p99-ms 20
+
+Index health (DESIGN.md §15): lookup serving is instrumented by default
+(``--no-health`` turns it off) — the run summary prints the model-facing
+health line (displacement p99 vs the error bound, drift score) and the
+alert verdict; ``--doctor`` exits nonzero when any alert is firing at
+the end of the run, so a scripted health check is one command:
+
+    PYTHONPATH=src python -m repro.launch.serve --mode lookup --doctor
 """
 from __future__ import annotations
 
@@ -75,7 +84,8 @@ def run_lookup(args):
     svc = LookupService(keys, LookupServiceConfig(
         spec=sp, max_batch=args.max_batch,
         deadline_ms=args.deadline_ms, executor=args.executor,
-        trace=bool(args.trace_out), slo_p99_ms=args.slo_p99_ms))
+        trace=bool(args.trace_out), slo_p99_ms=args.slo_p99_ms,
+        health=not args.no_health))
     print(f"serving spec: {svc.generation.spec.to_json()} "
           f"(executor={args.executor})")
     q = sosd.make_queries(keys, args.requests * args.keys_per_request, seed=2)
@@ -86,7 +96,8 @@ def run_lookup(args):
                 MetricsServer(svc, port=args.metrics_port,
                               window_s=args.window_s))
             print(f"metrics: http://127.0.0.1:{server.port}/metrics "
-                  f"(+ /metrics.json, /trace.json)")
+                  f"(+ /metrics.json, /trace.json, /health.json, "
+                  f"/alerts.json, /healthz)")
         if args.metrics_jsonl:
             stack.enter_context(JsonlMetricsLogger(
                 svc, args.metrics_jsonl, interval_s=1.0,
@@ -127,7 +138,25 @@ def run_lookup(args):
               f"open in chrome://tracing or https://ui.perfetto.dev")
     if args.metrics_jsonl:
         print(f"wrote metrics JSONL to {args.metrics_jsonl}")
+    # §15 health verdict: evaluate the alert rules over the whole run
+    events = svc.check_alerts(window_s=max(args.window_s, dt + 1.0))
+    firing = svc.alerts.firing()
+    if not args.no_health:
+        h = svc.health_snapshot(max(args.window_s, dt + 1.0))
+        print(f"health: disp p99 {h['disp_p99']:.0f} of max_err "
+              f"{int(svc.generation.plan.bounds.max_err)} "
+              f"(bound utilization {h['bound_utilization_p99']:.2f}, "
+              f"{h['disp_p99_ratio']:.2f}x build), "
+              f"last-mile steps {h['mean_last_mile_steps']:.1f}, "
+              f"drift TV {h['drift_tv']:.3f} over {h['drift_n']:.0f} "
+              f"lookups")
+    for e in events:
+        print(f"alert {e['rule']} {e['state']}: {e['key']}={e['value']:.3g} "
+              f"({e['op']} {e['threshold']:.3g}) — {e['action']}")
+    print("alerts: " + (", ".join(firing) if firing else "none firing"))
     print(f"exact vs lower_bound oracle: {exact}")
+    if args.doctor and (firing or not exact):
+        raise SystemExit(1)
 
 
 def main():
@@ -172,6 +201,14 @@ def main():
                          "report violations + error-budget burn")
     ap.add_argument("--window-s", type=float, default=10.0,
                     help="rolling window the ops surfaces report over")
+    ap.add_argument("--no-health", action="store_true",
+                    help="disable index-health instrumentation "
+                         "(DESIGN.md §15); reads dispatch the plain "
+                         "executable with no stats reduction")
+    ap.add_argument("--doctor", action="store_true",
+                    help="one-shot health check: exit 1 when any alert "
+                         "is firing (or the oracle check fails) at the "
+                         "end of the run")
     args = ap.parse_args()
 
     if args.mode == "lookup":

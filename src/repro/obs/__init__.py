@@ -20,13 +20,32 @@ imports *us*):
   export     Prometheus-text + JSON exporters, a stdlib HTTP metrics
              endpoint (`MetricsServer`), and periodic JSONL metrics
              logging (`JsonlMetricsLogger`).
+  health     per-generation model health (DESIGN.md §15): lifetime
+             prediction-displacement statistics vs the static `max_err`
+             bound, and a windowed rank-traffic ring compared against
+             the build-time key distribution (total-variation drift).
+             Fed by the device-reduced stats of
+             `core.plan.instrumented_expr`.
+  alerts     declarative `AlertRule` thresholds over any flat snapshot
+             key, evaluated by an `AlertEngine` with ok/firing/resolved
+             state, emission cooldown, and pluggable sinks.
 """
+from repro.obs.alerts import (AlertEngine, AlertRule, JsonlSink, LogSink,
+                              default_rules)
+from repro.obs.health import GenerationHealth, HealthMonitor
 from repro.obs.trace import SpanRecorder, maybe_span
 from repro.obs.windows import LatencyHistogram, WindowedMetrics
 
 __all__ = [
+    "AlertEngine",
+    "AlertRule",
+    "GenerationHealth",
+    "HealthMonitor",
+    "JsonlSink",
     "LatencyHistogram",
+    "LogSink",
     "SpanRecorder",
     "WindowedMetrics",
+    "default_rules",
     "maybe_span",
 ]

@@ -13,17 +13,26 @@ like.  Surfaces:
   prometheus_text   one gauge line per numeric snapshot key (the
                     Prometheus text exposition format a scraper ingests)
   MetricsServer     stdlib ThreadingHTTPServer on a daemon thread:
-                    /metrics (Prometheus text, lifetime + windowed),
-                    /metrics.json (structured), /trace.json (Chrome
-                    trace when tracing is on), /healthz
+                    /metrics (Prometheus text: lifetime + windowed +
+                    index health), /metrics.json (structured),
+                    /trace.json (Chrome trace when tracing is on),
+                    /health.json (flat health snapshot + per-generation
+                    records + alert states), /alerts.json (the full
+                    alert-engine document, evaluated at request time),
+                    /healthz (200/503 from the provider's
+                    `health_status` when it has one — stopped service
+                    or firing critical alert answers 503)
   JsonlMetricsLogger  periodic snapshot appends to a JSONL file — the
                     offline-analysis feed (one timestamped JSON object
-                    per line; pandas/jq-friendly)
+                    per line; pandas/jq-friendly).  A failed write
+                    (disk full, path removed) counts in ``n_errors``
+                    and the loop keeps going.
 """
 from __future__ import annotations
 
 import http.server
 import json
+import math
 import threading
 import time
 from typing import Dict, Optional
@@ -35,6 +44,17 @@ __all__ = ["JsonlMetricsLogger", "MetricsServer", "metrics_payload",
 
 def _numeric(v) -> bool:
     return isinstance(v, (int, float, bool))
+
+
+def _prom_value(v: float) -> str:
+    """Prometheus exposition rendering of one sample value: the text
+    format spells non-finite values ``+Inf``/``-Inf``/``NaN`` — bare
+    ``inf``/``nan`` (Python's float repr) is a parse error upstream."""
+    if math.isnan(v):
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return f"{v:.10g}"
 
 
 def prometheus_text(snapshot: Dict, prefix: str = "repro_lookup_",
@@ -52,7 +72,7 @@ def prometheus_text(snapshot: Dict, prefix: str = "repro_lookup_",
             continue
         name = prefix + key
         lines.append(f"# TYPE {name} gauge")
-        lines.append(f"{name}{lbl} {float(v):.10g}")
+        lines.append(f"{name}{lbl} {_prom_value(float(v))}")
     return "\n".join(lines) + "\n"
 
 
@@ -70,6 +90,12 @@ def metrics_payload(provider, window_s: float = 10.0) -> Dict:
     if rec is not None:
         payload["trace_spans"] = len(rec)
         payload["trace_dropped"] = rec.n_dropped
+    health = getattr(provider, "health", None)
+    if health is not None:
+        payload["health"] = health.snapshot(window_s)
+    alerts = getattr(provider, "alerts", None)
+    if alerts is not None:
+        payload["alerts_firing"] = alerts.firing()
     return payload
 
 
@@ -100,9 +126,16 @@ class MetricsServer:
 
             def do_GET(self):   # noqa: N802 — http.server API
                 url = urlparse(self.path)
-                q = parse_qs(url.query)
-                window_s = float(q.get("window_s", [outer.window_s])[0])
                 try:
+                    q = parse_qs(url.query)
+                    try:
+                        window_s = float(
+                            q.get("window_s", [outer.window_s])[0])
+                    except (TypeError, ValueError):
+                        # a malformed query is the CLIENT's error: 400,
+                        # not a 500 through the blanket handler below
+                        self._send(400, b"bad window_s\n", "text/plain")
+                        return
                     if url.path == "/metrics":
                         body = outer.render_prometheus(window_s)
                         self._send(200, body.encode(),
@@ -120,8 +153,32 @@ class MetricsServer:
                             self._send(200,
                                        json.dumps(rec.to_chrome()).encode(),
                                        "application/json")
+                    elif url.path == "/health.json":
+                        body = outer.render_health(window_s)
+                        if body is None:
+                            self._send(404, b"no health surface\n",
+                                       "text/plain")
+                        else:
+                            self._send(200, body.encode(),
+                                       "application/json")
+                    elif url.path == "/alerts.json":
+                        body = outer.render_alerts(window_s)
+                        if body is None:
+                            self._send(404, b"no alert engine\n",
+                                       "text/plain")
+                        else:
+                            self._send(200, body.encode(),
+                                       "application/json")
                     elif url.path == "/healthz":
-                        self._send(200, b"ok\n", "text/plain")
+                        status_fn = getattr(outer.provider,
+                                            "health_status", None)
+                        if status_fn is None:
+                            self._send(200, b"ok\n", "text/plain")
+                        else:
+                            code, doc = status_fn(window_s)
+                            self._send(code,
+                                       (json.dumps(doc) + "\n").encode(),
+                                       "application/json")
                     else:
                         self._send(404, b"not found\n", "text/plain")
                 except Exception as e:   # noqa: BLE001 — a bad scrape must
@@ -133,13 +190,50 @@ class MetricsServer:
         self._thread: Optional[threading.Thread] = None
 
     def render_prometheus(self, window_s: Optional[float] = None) -> str:
-        payload = metrics_payload(
-            self.provider, self.window_s if window_s is None else window_s)
+        window_s = self.window_s if window_s is None else window_s
+        payload = metrics_payload(self.provider, window_s)
         text = prometheus_text(payload["lifetime"])
         if "windowed" in payload:
             text += prometheus_text(payload["windowed"],
                                     prefix="repro_lookup_window_")
+        if "health" in payload:
+            text += prometheus_text(payload["health"],
+                                    prefix="repro_lookup_health_")
         return text
+
+    def render_health(self, window_s: Optional[float] = None):
+        """The `/health.json` document, or None when the provider has no
+        health surface: the flat alert-namespace snapshot, the per-
+        generation records, and the alert states."""
+        snap_fn = getattr(self.provider, "health_snapshot", None)
+        if snap_fn is None:
+            return None
+        window_s = self.window_s if window_s is None else window_s
+        doc: Dict = {"t_unix": time.time(),
+                     "snapshot": snap_fn(window_s)}
+        registry = getattr(self.provider, "registry", None)
+        if registry is not None and hasattr(registry, "health_records"):
+            doc["generations"] = registry.health_records(window_s)
+        alerts = getattr(self.provider, "alerts", None)
+        if alerts is not None:
+            doc["alerts"] = {"firing": alerts.firing(),
+                             "states": alerts.state()}
+        return json.dumps(doc)
+
+    def render_alerts(self, window_s: Optional[float] = None):
+        """The `/alerts.json` document, or None without an engine —
+        rules are re-evaluated against a fresh snapshot first, so the
+        reported states reflect request time, not the last poll."""
+        alerts = getattr(self.provider, "alerts", None)
+        if alerts is None:
+            return None
+        window_s = self.window_s if window_s is None else window_s
+        check = getattr(self.provider, "check_alerts", None)
+        if check is not None:
+            check(window_s)
+        doc = alerts.to_dict()
+        doc["t_unix"] = time.time()
+        return json.dumps(doc)
 
     @property
     def port(self) -> int:
@@ -179,12 +273,25 @@ class JsonlMetricsLogger:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.n_written = 0
+        #: writes that failed (disk full, path removed, provider error).
+        #: The loop keeps going — a logging outage must never silently
+        #: kill the feed for the rest of the run.
+        self.n_errors = 0
 
-    def write_once(self) -> None:
-        line = json.dumps(metrics_payload(self.provider, self.window_s))
-        with open(self.path, "a") as f:
-            f.write(line + "\n")
+    def write_once(self) -> bool:
+        """One snapshot append; returns whether it succeeded.  Failures
+        count in ``n_errors`` instead of raising — the periodic loop
+        (and any direct caller) survives a transient sink outage."""
+        try:
+            line = json.dumps(
+                metrics_payload(self.provider, self.window_s))
+            with open(self.path, "a") as f:
+                f.write(line + "\n")
+        except Exception:   # noqa: BLE001 — the feed outlives its sink
+            self.n_errors += 1
+            return False
         self.n_written += 1
+        return True
 
     def _loop(self) -> None:
         while not self._stop.wait(self.interval_s):

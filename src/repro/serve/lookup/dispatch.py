@@ -103,22 +103,36 @@ class ShardedDispatcher:
         return self.place(q), p
 
     @staticmethod
-    def finalize(out, m: int):
+    def finalize(out, m: int, instrumented: bool = False):
         """Block on a launched computation and slice off the pad lanes —
         the completion half of dispatch (the only point that waits on
-        the device, which is what the async executor overlaps)."""
+        the device, which is what the async executor overlaps).
+
+        With ``instrumented``, ``out`` is ``(payload, packed stats)``:
+        the payload is finalized recursively while the packed stats
+        vector — already a fixed-size device reduction with pad lanes
+        masked out on device — crosses to host in ONE transfer, never
+        sliced.
+        """
+        if instrumented:
+            payload, stats = out
+            return (ShardedDispatcher.finalize(payload, m),
+                    np.asarray(stats))
         if isinstance(out, tuple):
             return tuple(np.asarray(o)[:m] for o in out)
         return np.asarray(out, dtype=np.int64)[:m]
 
-    def __call__(self, fn, keys: np.ndarray, backend: str = "jnp"):
+    def __call__(self, fn, keys: np.ndarray, backend: str = "jnp",
+                 n_valid_arg: bool = False):
         """Run a plan (compiled on demand for ``backend``) or any jitted
         lookup callable on `keys`, synchronously: launch then finalize.
 
         Returns int64 positions for plain lookups; executables that
         return a tuple (e.g. a plan's scan: positions + record window)
         come back as a tuple of host arrays, each sliced to the real
-        batch size along axis 0.
+        batch size along axis 0.  ``n_valid_arg=True`` passes the real
+        (pre-pad) batch size as a dynamic int32 scalar second argument —
+        the instrumented-executable convention.
         """
         from repro.obs.trace import maybe_span
 
@@ -130,4 +144,6 @@ class ShardedDispatcher:
             qj, p = self.pad_and_place(keys)
         with maybe_span(self.recorder, "device", cat="serve",
                         padded=int(p), n_shards=self.n_shards):
-            return self.finalize(fn(qj), keys.size)
+            out = fn(qj, np.int32(keys.size)) if n_valid_arg else fn(qj)
+            return self.finalize(out, keys.size,
+                                 instrumented=n_valid_arg)

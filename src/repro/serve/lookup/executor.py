@@ -73,6 +73,11 @@ class AsyncContext:
     scan_fn: Callable          # m -> ((q, *bind) -> (positions, window))
     bind: Tuple = ()           # device operands appended after q
     sample_key: int = 1        # a valid key for warm-up dummy batches
+    #: Health telemetry (DESIGN.md §15): when set, ``read_fn`` is the
+    #: plan's instrumented executable ``(q, n_valid, *bind) -> (pos,
+    #: stats)`` — reads pass the real batch size as a dynamic int32
+    #: scalar and completion strips the stats off for the monitor.
+    instrumented: bool = False
 
 
 @dataclasses.dataclass
@@ -102,6 +107,8 @@ class _Slot:
     t_submit_oldest: float = 0.0
     t_launch: float = 0.0
     is_insert: bool = False
+    version: int = -1            # generation the stats (if any) belong to
+    instrumented: bool = False   # out is (payload, packed health stats)
 
 
 _STOP = object()
@@ -152,11 +159,15 @@ class ExecutableCache:
 
     # -- build/get -------------------------------------------------------
     @staticmethod
-    def _build(fn, bucket: int, bind: Tuple, dispatcher):
+    def _build(fn, bucket: int, bind: Tuple, dispatcher,
+               instrumented: bool = False):
         """AOT-lower ``fn`` for the padded bucket (batch-sharded query +
         replicated bind operands) when it supports `.lower`; otherwise
         return the callable unchanged (jit wrappers carry their own
-        per-shape cache; injected plain callables just run)."""
+        per-shape cache; injected plain callables just run).
+        Instrumented executables take the real batch size as a dynamic
+        int32 scalar between the query and the bind operands — ONE
+        compiled program per bucket, not one per occupancy."""
         import jax
         import jax.numpy as jnp
 
@@ -167,8 +178,11 @@ class ExecutableCache:
             sds_q = jax.ShapeDtypeStruct(
                 (bucket,), jnp.uint64,
                 sharding=dispatcher.query_sharding(bucket))
-            sds_bind = [jax.ShapeDtypeStruct(b.shape, b.dtype) for b in bind]
-            return lower(sds_q, *sds_bind).compile()
+            sds_args = ([jax.ShapeDtypeStruct((), jnp.int32)]
+                        if instrumented else [])
+            sds_args += [jax.ShapeDtypeStruct(b.shape, b.dtype)
+                         for b in bind]
+            return lower(sds_q, *sds_args).compile()
         except Exception:   # noqa: BLE001 — AOT is an optimization only
             return fn
 
@@ -198,7 +212,9 @@ class ExecutableCache:
             with maybe_span(self.recorder, "compile", cat="compile",
                             kind=kind, aux=int(aux), bucket=int(bucket),
                             version=ctx.key[0], warm=bool(warm)):
-                exe = self._build(make_fn(), bucket, ctx.bind, dispatcher)
+                exe = self._build(
+                    make_fn(), bucket, ctx.bind, dispatcher,
+                    instrumented=ctx.instrumented and kind == "read")
             with self._mu:
                 self._exes[key] = exe
         if self.metrics is not None:
@@ -238,7 +254,9 @@ class ExecutableCache:
             for kind, aux, make_fn in cells:
                 exe = self.get(ctx, kind, aux, int(bucket), make_fn,
                                dispatcher, warm=True)
-                jax.block_until_ready(exe(dummy, *ctx.bind))
+                args = ((np.int32(bucket),)
+                        if ctx.instrumented and kind == "read" else ())
+                jax.block_until_ready(exe(dummy, *args, *ctx.bind))
                 n += 1
         return n
 
@@ -374,7 +392,9 @@ class AsyncExecutor:
             q, padded = svc.dispatcher.pad_and_place(keys)
             exe = svc.exec_cache.get(ctx, item.kind, item.aux, padded,
                                      make_fn, svc.dispatcher)
-            out = exe(q, *ctx.bind)      # async dispatch: does not block
+            instr = ctx.instrumented and item.kind == "read"
+            args = (np.int32(keys.size),) if instr else ()
+            out = exe(q, *args, *ctx.bind)   # async dispatch: no block
         except BaseException as e:       # noqa: BLE001 — fail the group only
             self._put(_Slot(group=group, kind=item.kind, error=e,
                             t_submit_oldest=t_oldest, t_launch=t0))
@@ -390,7 +410,8 @@ class AsyncExecutor:
                     rid_first=group[0].rid, rid_last=group[-1].rid)
         self._put(_Slot(group=group, kind=item.kind, out=out, m=keys.size,
                         padded=padded, t_submit_oldest=t_oldest,
-                        t_launch=t0))
+                        t_launch=t0, version=ctx.key[0],
+                        instrumented=instr))
 
     def _put(self, slot: _Slot) -> None:
         with self._inflight_cv:
@@ -422,12 +443,18 @@ class AsyncExecutor:
             else:
                 t_wait = time.perf_counter()
                 try:
-                    out = svc.dispatcher.finalize(slot.out, slot.m)
+                    out = svc.dispatcher.finalize(
+                        slot.out, slot.m, instrumented=slot.instrumented)
                 except BaseException as e:   # noqa: BLE001 — device failure
                     for r in slot.group:     # fails the slot, not the loop
                         r.future._set_exception(e)
                     return
                 t_end = time.perf_counter()
+                if slot.instrumented:
+                    # instrumented read: route the device-reduced stats
+                    # to the record of the generation the slot ran on
+                    out, stats = out
+                    svc._note_health(slot.version, stats, t_end)
                 off = 0
                 for r in slot.group:
                     end = off + r.keys.size

@@ -184,6 +184,7 @@ class ServiceMetrics:
                                       else 0.0),
                 "cache_hits": self.cache_hits,
                 "cache_misses": self.cache_misses,
+                "cache_accesses": self.cache_hits + self.cache_misses,
                 "cache_hit_rate": (
                     self.cache_hits / (self.cache_hits + self.cache_misses)
                     if self.cache_hits + self.cache_misses else 0.0),

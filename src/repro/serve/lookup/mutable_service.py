@@ -84,6 +84,8 @@ class MutableLookupService(LookupService):
             view = self.mindex.reset(keys)
         self.metrics.set_delta_gauge(
             delta_keys=0, threshold=self.cfg.compact_threshold)
+        if self.health is not None:
+            self.health.note_delta(0, self.cfg.compact_threshold)
         return view.generation
 
     # -- client surface --------------------------------------------------
@@ -116,15 +118,22 @@ class MutableLookupService(LookupService):
         observed half-applied (delta key counted twice or dropped).
         Scans go through the plan's merged-scan transform (sorted union
         of the base and delta windows == a scan over the fully merged
-        array)."""
+        array).  With health on, reads run the instrumented merged
+        executable — same merged ranks, plus BASE-plan stats (the base
+        model is what the health record describes)."""
         view = self.mindex.view()
         delta_dev = view.delta.device
+        gen = view.generation
 
         def scan_for(m: int):
             fn = view.scan_fn(m)
             return lambda q: fn(q, delta_dev)
 
-        return view.lookup, scan_for
+        if self.health is not None:
+            ifn = gen.instrumented_merged_fn()
+            return (lambda q, n_valid: ifn(q, n_valid, delta_dev),
+                    scan_for, gen.version)
+        return view.lookup, scan_for, gen.version
 
     def _insert_apply(self, run) -> np.ndarray:
         """Land one insert run in the delta (host-side, in admission
@@ -142,6 +151,9 @@ class MutableLookupService(LookupService):
         self.metrics.set_delta_gauge(
             delta_keys=self.mindex.delta_count,
             threshold=self.mindex.compact_threshold)
+        if self.health is not None:
+            self.health.note_delta(self.mindex.delta_count,
+                                   self.mindex.compact_threshold)
         if self.cfg.auto_compact and self.mindex.needs_compaction:
             self._spawn_compaction()
         return admitted
@@ -175,12 +187,15 @@ class MutableLookupService(LookupService):
         pow2 pad-boundary crossing is a (correct, observable) miss."""
         view = self.mindex.view()
         delta_dev = view.delta.device
+        instrumented = self.health is not None
         return AsyncContext(
             key=(view.generation.version, int(delta_dev.shape[0])),
-            read_fn=view.merged_fn,
+            read_fn=(view.generation.instrumented_merged_fn()
+                     if instrumented else view.merged_fn),
             scan_fn=view.scan_fn,
             bind=(delta_dev,),
-            sample_key=int(np.asarray(view.generation.data[:1])[0]))
+            sample_key=int(np.asarray(view.generation.data[:1])[0]),
+            instrumented=instrumented)
 
     def _async_work_items(self, batch):
         """Re-pin PER RUN (the sync `_process_batch` contract): an
@@ -246,6 +261,9 @@ class MutableLookupService(LookupService):
         self.metrics.set_delta_gauge(
             delta_keys=self.mindex.delta_count,
             threshold=self.mindex.compact_threshold)
+        if self.health is not None:
+            self.health.note_delta(self.mindex.delta_count,
+                                   self.mindex.compact_threshold)
         return gen
 
     def force_compact(self) -> Optional[Generation]:

@@ -59,6 +59,17 @@ class Generation:
         the plan per (m, backend) — op kind "scan" dispatches here."""
         return self.plan.compile_scan(m, backend=self.backend)
 
+    def instrumented_fn(self) -> Callable:
+        """Plan-compiled instrumented lookup ``(q, n_valid) -> (LB,
+        health stats)`` — same positions as ``fn`` bit-for-bit, plus the
+        device-reduced stats the health monitor folds in."""
+        return self.plan.compile_instrumented(backend=self.backend)
+
+    def instrumented_merged_fn(self) -> Callable:
+        """Instrumented merged-view lookup ``(q, n_valid, delta) ->
+        (merged LB, base-plan health stats)`` for the mutable service."""
+        return self.plan.compile_instrumented_merged(backend=self.backend)
+
 
 class IndexRegistry:
     def __init__(self):
@@ -71,6 +82,11 @@ class IndexRegistry:
         #: lifecycle spans, so a latency blip during a swap is visually
         #: attributable in the exported trace.
         self.recorder = None
+        #: optional `repro.obs.health.HealthMonitor` (set by the owning
+        #: service): every publish opens a per-generation health record
+        #: keyed by version, so stats from a batch that completes against
+        #: a just-retired generation still land in ITS record.
+        self.health = None
 
     def subscribe(self, callback) -> None:
         """Register ``callback(name, generation)`` to run after every
@@ -119,6 +135,8 @@ class IndexRegistry:
         with self._lock:
             self._current[name] = gen
             subscribers = list(self._subscribers)
+        if self.health is not None:
+            self.health.on_publish(gen)
         if self.recorder is not None:
             self.recorder.instant("publish", cat="lifecycle", reg_name=name,
                                   version=gen.version, index=gen.plan.name,
@@ -150,3 +168,10 @@ class IndexRegistry:
             data = jnp.asarray(keys)
         return self.publish(build, data, name=name, last_mile=sp.last_mile,
                             backend=sp.backend, spec=sp)
+
+    def health_records(self, window_s: float = 10.0) -> list:
+        """Per-generation health records (empty when no monitor is
+        attached) — the registry-facing view `/health.json` exports."""
+        if self.health is None:
+            return []
+        return self.health.records(window_s)

@@ -36,6 +36,8 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core import spec as spec_mod
+from repro.obs.alerts import AlertEngine, AlertRule, default_rules
+from repro.obs.health import HealthMonitor
 from repro.obs.trace import SpanRecorder, maybe_span
 from repro.serve.common import MonotonicCounter
 from repro.serve.lookup.admission import LookupFuture, MicroBatcher
@@ -105,6 +107,15 @@ class LookupServiceConfig:
     #: Optional p99 SLO target: request latencies above it burn error
     #: budget, reported per window (`slo_budget_burn`).
     slo_p99_ms: Optional[float] = None
+    #: Index-health telemetry (DESIGN.md §15).  On by default: reads
+    #: dispatch the plan's instrumented executable — bit-identical
+    #: positions plus O(buckets) device-reduced stats per batch — and a
+    #: `HealthMonitor` keeps per-generation displacement/traffic/drift
+    #: records behind `health_snapshot()` / `/health.json`.
+    health: bool = True
+    #: Alert rules evaluated over `health_snapshot()` keys; None -> the
+    #: shipped `repro.obs.alerts.default_rules()`, () -> no rules.
+    alert_rules: Optional[Tuple[AlertRule, ...]] = None
 
     def resolved_spec(self) -> spec_mod.IndexSpec:
         """The validated `IndexSpec` every build of this service uses."""
@@ -130,6 +141,18 @@ class LookupService:
                          if self.cfg.trace else None)
         self.registry = IndexRegistry()
         self.registry.recorder = self.recorder
+        #: §15 per-generation health monitor, or None when disabled —
+        #: attached to the registry BEFORE the first publish so the
+        #: initial generation gets a record too
+        self.health = (HealthMonitor(slot_s=self.cfg.window_slot_s,
+                                     n_slots=self.cfg.window_slots)
+                       if self.cfg.health else None)
+        self.registry.health = self.health
+        #: §15 alert engine — always present (rules may be empty); it
+        #: only evaluates when asked (`check_alerts`/endpoints/doctor)
+        self.alerts = AlertEngine(
+            rules=(default_rules() if self.cfg.alert_rules is None
+                   else self.cfg.alert_rules))
         self.dispatcher = ShardedDispatcher(
             mesh=mesh, pad_quantum=self.cfg.pad_quantum,
             recorder=self.recorder)
@@ -251,34 +274,47 @@ class LookupService:
 
     def _dispatch_run(self, kind: str, run, ctx=None) -> None:
         """Route one same-kind run; subclasses add kinds (inserts)."""
-        lookup_fn, scan_for = ctx if ctx is not None else self._pin_context()
+        lookup_fn, scan_for, version = (ctx if ctx is not None
+                                        else self._pin_context())
         if kind == "scan":
             self._dispatch_scans(run, scan_for)
         else:
-            self._dispatch_reads(run, lookup_fn)
+            self._dispatch_reads(run, lookup_fn, version)
 
     def _pin_context(self):
-        """``(lookup_fn, m -> scan executable)`` bound to ONE immutable
-        generation — the snapshot a batch completes against."""
+        """``(lookup_fn, m -> scan executable, version)`` bound to ONE
+        immutable generation — the snapshot a batch completes against.
+        With health on, ``lookup_fn`` is the plan's INSTRUMENTED
+        executable (same positions bit-for-bit, plus device-reduced
+        stats); ``version`` routes those stats to the right record."""
         gen = self.registry.current()
-        return gen.fn, gen.scan_fn
+        if self.health is not None:
+            return gen.instrumented_fn(), gen.scan_fn, gen.version
+        return gen.fn, gen.scan_fn, gen.version
 
-    def _complete_run(self, group, make_fn) -> None:
+    def _complete_run(self, group, make_fn, version: int = -1,
+                      instrumented: bool = False) -> None:
         """Dispatch one request group through ``make_fn()`` and complete
         its futures in order; tuple results (scans) are sliced per array.
         Failures fail the group's futures, never the flusher — including
         executable CONSTRUCTION failures (``make_fn`` runs inside the
-        guard: scan compilation rejects point-only plans)."""
+        guard: scan compilation rejects point-only plans).  Instrumented
+        reads strip the stats dict off the result and fold it into the
+        health record of ``version`` — futures never see it."""
         keys = (group[0].keys if len(group) == 1
                 else np.concatenate([r.keys for r in group]))
         t0 = time.perf_counter()
         try:
-            out = self.dispatcher(make_fn(), keys)
+            out = self.dispatcher(make_fn(), keys,
+                                  n_valid_arg=instrumented)
         except BaseException as e:  # noqa: BLE001 — fail the group, not the flusher
             for r in group:
                 r.future._set_exception(e)
             return
         t1 = time.perf_counter()
+        if instrumented:
+            out, stats = out
+            self._note_health(version, stats, t1)
         off = 0
         for r in group:
             end = off + r.keys.size
@@ -299,8 +335,9 @@ class LookupService:
             t_start=t0, t_end=t1,
             per_request=[(r.t_submit, r.keys.size) for r in group])
 
-    def _dispatch_reads(self, batch, lookup_fn) -> None:
-        self._complete_run(batch, lambda: lookup_fn)
+    def _dispatch_reads(self, batch, lookup_fn, version: int = -1) -> None:
+        self._complete_run(batch, lambda: lookup_fn, version=version,
+                           instrumented=self.health is not None)
 
     def _dispatch_scans(self, batch, scan_for) -> None:
         """Dispatch a run of scan requests, grouped by scan length (the
@@ -317,12 +354,14 @@ class LookupService:
         the async analogue of `_pin_context` (same snapshot semantics —
         a hot-swap lands between batches, never inside one)."""
         gen = self.registry.current()
+        instrumented = self.health is not None
         return AsyncContext(
             key=(gen.version,),
-            read_fn=gen.fn,
+            read_fn=gen.instrumented_fn() if instrumented else gen.fn,
             scan_fn=gen.scan_fn,
             bind=(),
-            sample_key=int(np.asarray(gen.data[:1])[0]))
+            sample_key=int(np.asarray(gen.data[:1])[0]),
+            instrumented=instrumented)
 
     def _async_work_items(self, batch):
         """Lazily yield `WorkItem`s for one taken batch, in admission
@@ -408,6 +447,55 @@ class LookupService:
                 if time.perf_counter() >= deadline:
                     return
                 time.sleep(0.005)
+
+    # -- index-health telemetry (DESIGN.md §15) ---------------------------
+    def _note_health(self, version: int, stats, t_end: float) -> None:
+        """Fold one completed batch's device-reduced stats into the
+        health record of the generation it ran against (both executors'
+        completion paths land here)."""
+        if self.health is not None:
+            self.health.accumulate(version, stats, t=t_end)
+
+    def health_snapshot(self, window_s: float = 10.0) -> Dict[str, float]:
+        """ONE flat key namespace over service + window + model health —
+        what alert rules evaluate and `/health.json` exports: the
+        lifetime `ServiceMetrics` snapshot, the trailing-window metrics
+        under a ``window_`` prefix (``window_covered_s`` reports actual
+        coverage), and the current generation's health keys."""
+        snap = self.metrics.snapshot()
+        win = self.metrics.windowed(window_s)
+        snap["window_covered_s"] = win.pop("window_s")
+        snap.update({f"window_{k}": v for k, v in win.items()})
+        if self.health is not None:
+            snap.update(self.health.snapshot(window_s))
+        snap["trace_dropped"] = float(self.recorder.n_dropped
+                                      if self.recorder is not None else 0)
+        snap["inflight_saturation"] = (
+            snap.get("mean_inflight_slots", 0.0) / self.cfg.slots
+            if self._async is not None and self.cfg.slots else 0.0)
+        snap["serving"] = 1.0 if self._thread is not None else 0.0
+        return snap
+
+    def check_alerts(self, window_s: float = 10.0) -> list:
+        """Evaluate every alert rule against a fresh `health_snapshot`;
+        returns the events emitted by THIS evaluation (state transitions
+        only — steady firing/ok emits nothing)."""
+        return self.alerts.evaluate(self.health_snapshot(window_s))
+
+    def health_status(self, window_s: float = 10.0):
+        """``(http_status, doc)`` for liveness surfaces (`/healthz`):
+        503 when the background flusher is not running or a critical
+        alert is firing, 200 otherwise.  Evaluates the rules first so
+        the answer reflects NOW, not the last poll."""
+        self.check_alerts(window_s)
+        firing = self.alerts.firing()
+        critical = self.alerts.firing(severity="critical")
+        serving = self._thread is not None
+        ok = serving and not critical
+        doc = {"status": "ok" if ok else "unhealthy",
+               "serving": serving,
+               "firing": firing, "critical": critical}
+        return (200 if ok else 503), doc
 
     def flush(self) -> bool:
         """Dispatch one due batch if any (size or deadline trigger)."""

@@ -1,0 +1,613 @@
+"""Index-health telemetry + alert engine (DESIGN.md §15).
+
+Acceptance contracts pinned here:
+
+  * instrumented bit-identity — `compile_instrumented` returns the SAME
+    positions as the plain lookup for every index family on both
+    backends, and its device-reduced stats vector is backend-invariant
+    and matches a plain numpy scatter reference exactly;
+  * `GenerationHealth` host accumulation (packed vector == named dict),
+    interpolated displacement quantiles, windowed drift scoring, and
+    the `HealthMonitor` version routing / retention bound;
+  * the `AlertEngine` state machine — flapping, cooldown suppression
+    with late emit / silent cancel, multi-rule keys, per-(event, sink)
+    failure isolation, cold-start sample gates;
+  * export surfaces — non-finite Prometheus values, 400 on malformed
+    ``window_s``, `/healthz` liveness+alert semantics, `/health.json`
+    and `/alerts.json`, JSONL sink-outage survival;
+  * end-to-end on BOTH executors: a mid-run hot-spot shift raises
+    `workload_drift` while stationary traffic stays silent, and the
+    mutable service's compaction lifecycle shows up in the per-
+    generation health records.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import functools
+import json
+import time
+import types
+import urllib.error
+import urllib.request
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data import sosd
+from repro.core import base, plan
+from repro.obs import alerts as alerts_mod
+from repro.obs import health as health_mod
+from repro.obs.alerts import AlertEngine, AlertRule, default_rules
+from repro.obs.export import (JsonlMetricsLogger, MetricsServer,
+                              prometheus_text)
+from repro.obs.health import (GenerationHealth, HEALTH_DISP_BUCKETS,
+                              HEALTH_STATS_SIZE, HEALTH_TRAFFIC_BUCKETS,
+                              HealthMonitor, build_rank_hist, unpack_stats)
+from repro.serve.lookup import (LookupService, LookupServiceConfig,
+                                MutableLookupService,
+                                MutableLookupServiceConfig)
+
+N_KEYS, N_Q = 8_000, 512
+
+INDEXES = [
+    ("rmi", dict(branching=512)),
+    ("pgm", dict(eps=32)),
+    ("radix_spline", dict(eps=16, radix_bits=12)),
+    ("rbs", dict(radix_bits=12)),
+    ("btree", dict(sample=8)),
+    ("binary_search", {}),
+]
+
+
+@functools.lru_cache(maxsize=None)
+def _cell(ds: str):
+    keys = sosd.generate(ds, N_KEYS, seed=3)
+    q = sosd.make_queries(keys, N_Q, seed=5, present_frac=0.7)
+    return keys, q, np.searchsorted(keys, q)
+
+
+def _ref_stats(pos, lo, hi, n, n_valid):
+    """Plain numpy scatter reference for `plan.health_stats_expr` —
+    the O(batch) host computation the device reduction replaces."""
+    pos, lo, hi = (np.asarray(a)[:n_valid].astype(np.int64)
+                   for a in (pos, lo, hi))
+    mid = lo + (hi - lo) // 2
+    disp = np.abs(pos - mid)
+    bucket = np.where(disp == 0, 0, np.minimum(
+        np.frexp(disp.astype(np.float64))[1], HEALTH_DISP_BUCKETS - 1))
+    disp_hist = np.bincount(bucket, minlength=HEALTH_DISP_BUCKETS)
+    rank = np.clip(pos, 0, n - 1)
+    traffic = np.bincount(rank * HEALTH_TRAFFIC_BUCKETS // n,
+                          minlength=HEALTH_TRAFFIC_BUCKETS)
+    return {"n": n_valid, "disp_sum": int(disp.sum()),
+            "disp_max": int(disp.max()), "disp_hist": disp_hist,
+            "traffic_hist": traffic,
+            "width_sum": int((hi - lo + 1).sum())}
+
+
+# ---------------------------------------------------------------------------
+# device side: instrumented executables
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,hyper", INDEXES,
+                         ids=[n for n, _ in INDEXES])
+def test_instrumented_parity_and_backend_invariance(name, hyper):
+    """Positions from the instrumented executable are bit-identical to
+    the plain lookup on BOTH backends, and the packed stats vector is
+    backend-invariant (stats derive from the plan's jnp bounds)."""
+    keys, q, lb = _cell("osm")
+    b = base.REGISTRY[name](keys, **hyper)
+    p = plan.lower(b, jnp.asarray(keys))
+    qj, nv = jnp.asarray(q), np.int32(N_Q)
+    pos_j, st_j = p.compile_instrumented(backend="jnp")(qj, nv)
+    pos_p, st_p = p.compile_instrumented(backend="pallas",
+                                         interpret=True)(qj, nv)
+    np.testing.assert_array_equal(np.asarray(pos_j), lb)
+    np.testing.assert_array_equal(np.asarray(pos_p), lb)
+    np.testing.assert_array_equal(np.asarray(st_j), np.asarray(st_p))
+    st = unpack_stats(st_j)
+    assert st["n"] == N_Q
+    assert st["disp_hist"].sum() == N_Q == st["traffic_hist"].sum()
+
+
+def test_instrumented_stats_match_numpy_scatter_reference():
+    """The scatter-free device histograms equal a plain `.at[idx].add`
+    style numpy reference — same buckets, same counts, exactly."""
+    keys, q, lb = _cell("amzn")
+    b = base.REGISTRY["rmi"](keys, branching=512)
+    p = plan.lower(b, jnp.asarray(keys))
+    _, packed = p.compile_instrumented()(jnp.asarray(q), np.int32(N_Q))
+    got = unpack_stats(packed)
+    lo, hi = p.bounds.predict(p.bounds.state, jnp.asarray(q))
+    ref = _ref_stats(lb, lo, hi, N_KEYS, N_Q)
+    for k in ("n", "disp_sum", "disp_max", "width_sum"):
+        assert got[k] == ref[k], k
+    np.testing.assert_array_equal(got["disp_hist"], ref["disp_hist"])
+    np.testing.assert_array_equal(got["traffic_hist"], ref["traffic_hist"])
+
+
+def test_instrumented_pad_lanes_do_not_pollute_stats():
+    """Pad lanes beyond ``n_valid`` are masked out on device: a padded
+    batch reports exactly the stats of its real prefix."""
+    keys, q, _ = _cell("face")
+    p = plan.lower(base.REGISTRY["pgm"](keys, eps=32), jnp.asarray(keys))
+    fn = p.compile_instrumented()
+    _, st_exact = fn(jnp.asarray(q), np.int32(N_Q))
+    q_pad = np.concatenate([q, np.full(N_Q, keys[0], np.uint64)])
+    _, st_padded = fn(jnp.asarray(q_pad), np.int32(N_Q))
+    np.testing.assert_array_equal(np.asarray(st_exact),
+                                  np.asarray(st_padded))
+
+
+def test_point_only_instrumented_counts_found_lanes():
+    """robin_hash has no prediction window: stats count only the FOUND
+    lanes of the real batch (traffic from their positions), zero
+    displacement, and the merged path refuses to exist."""
+    keys, q, lb = _cell("wiki")
+    p = plan.lower(base.REGISTRY["robin_hash"](keys), jnp.asarray(keys))
+    pos, packed = p.compile_instrumented()(jnp.asarray(q), np.int32(N_Q))
+    pos = np.asarray(pos)
+    present = np.isin(q, keys)
+    np.testing.assert_array_equal(pos >= 0, present)
+    st = unpack_stats(packed)
+    assert st["n"] == int(present.sum())
+    assert st["disp_sum"] == 0 and st["disp_max"] == 0
+    assert st["traffic_hist"].sum() == st["n"]
+    with pytest.raises(ValueError):
+        p.instrumented_merged_expr()
+
+
+def test_instrumented_merged_parity():
+    """Merged instrumented ranks equal `compile_merged`'s; the stats
+    describe the BASE plan (same vector as the unmerged path)."""
+    keys, q, _ = _cell("amzn")
+    delta = sosd.generate("osm", 256, seed=7)
+    delta = delta[~np.isin(delta, keys)]
+    p = plan.lower(base.REGISTRY["radix_spline"](keys, eps=16,
+                                                 radix_bits=12),
+                   jnp.asarray(keys))
+    qj, dj = jnp.asarray(q), jnp.asarray(np.sort(delta))
+    want = np.asarray(p.compile_merged()(qj, dj))
+    pos, st_m = p.compile_instrumented_merged()(qj, np.int32(N_Q), dj)
+    np.testing.assert_array_equal(np.asarray(pos), want)
+    _, st_plain = p.compile_instrumented()(qj, np.int32(N_Q))
+    np.testing.assert_array_equal(np.asarray(st_m), np.asarray(st_plain))
+
+
+def test_unpack_stats_shape_contract():
+    vec = np.arange(HEALTH_STATS_SIZE, dtype=np.int64)
+    st = unpack_stats(vec)
+    assert st["n"] == 0 and st["steps_sum"] == 4
+    assert st["disp_hist"].shape == (HEALTH_DISP_BUCKETS,)
+    assert st["traffic_hist"].shape == (HEALTH_TRAFFIC_BUCKETS,)
+    with pytest.raises(ValueError):
+        unpack_stats(np.zeros(HEALTH_STATS_SIZE - 1))
+
+
+def test_build_displacement_quantile_caches_and_degenerates():
+    keys, _, _ = _cell("osm")
+    p = plan.lower(base.REGISTRY["rmi"](keys, branching=512),
+                   jnp.asarray(keys))
+    v = p.build_displacement_quantile(0.99)
+    assert v > 0.0 and p.build_displacement_quantile(0.99) == v
+    ph = plan.lower(base.REGISTRY["robin_hash"](keys), jnp.asarray(keys))
+    assert ph.build_displacement_quantile(0.99) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# host side: GenerationHealth / HealthMonitor
+# ---------------------------------------------------------------------------
+def _mk_stats(disp_hist=None, traffic_hist=None, n=0, **kw):
+    st = {"n": n, "disp_sum": 0, "disp_max": 0, "width_sum": 0,
+          "steps_sum": 0,
+          "disp_hist": np.zeros(HEALTH_DISP_BUCKETS, np.int64),
+          "traffic_hist": np.zeros(HEALTH_TRAFFIC_BUCKETS, np.int64)}
+    if disp_hist is not None:
+        st["disp_hist"] = np.asarray(disp_hist, np.int64)
+    if traffic_hist is not None:
+        st["traffic_hist"] = np.asarray(traffic_hist, np.int64)
+    st.update(kw)
+    return st
+
+
+def test_accumulate_packed_vector_equals_dict():
+    """The packed int64 vector an executable returns and the named dict
+    fold to the same record."""
+    keys, q, _ = _cell("face")
+    p = plan.lower(base.REGISTRY["pgm"](keys, eps=32), jnp.asarray(keys))
+    _, packed = p.compile_instrumented()(jnp.asarray(q), np.int32(N_Q))
+    a = GenerationHealth(1, "pgm", N_KEYS, p.bounds.max_err,
+                         clock=lambda: 0.0)
+    b = GenerationHealth(1, "pgm", N_KEYS, p.bounds.max_err,
+                         clock=lambda: 0.0)
+    a.accumulate(np.asarray(packed))
+    b.accumulate(unpack_stats(packed))
+    assert a.snapshot() == b.snapshot()
+
+
+def test_disp_quantile_interpolates_within_bucket():
+    g = GenerationHealth(1, "rmi", 1000, 1024, clock=lambda: 0.0)
+    # 100 observations, all landing in bucket 10 = [512, 1023]
+    h = np.zeros(HEALTH_DISP_BUCKETS, np.int64)
+    h[10] = 100
+    g.accumulate(_mk_stats(disp_hist=h, n=100, disp_max=1000))
+    # median interpolates to mid-bucket, NOT the 1023 upper edge
+    assert 512 < g.disp_quantile(0.5) < 1023
+    assert abs(g.disp_quantile(0.5) - (512 + 0.5 * 511)) < 1e-9
+    # all mass at zero displacement
+    g0 = GenerationHealth(1, "rmi", 1000, 1024, clock=lambda: 0.0)
+    z = np.zeros(HEALTH_DISP_BUCKETS, np.int64)
+    z[0] = 7
+    g0.accumulate(_mk_stats(disp_hist=z, n=7))
+    assert g0.disp_quantile(0.99) == 0.0
+    # overflow bucket reports the observed max
+    go = GenerationHealth(1, "rmi", 1000, 1024, clock=lambda: 0.0)
+    o = np.zeros(HEALTH_DISP_BUCKETS, np.int64)
+    o[-1] = 5
+    go.accumulate(_mk_stats(disp_hist=o, n=5, disp_max=9_999_999))
+    assert go.disp_quantile(0.99) == 9_999_999.0
+
+
+def test_drift_is_windowed_not_lifetime():
+    """A traffic shift must not be diluted by the stationary history:
+    the drift read over a trailing window sees ONLY the shift."""
+    t = [0.0]
+    g = GenerationHealth(1, "rmi", 64_000, 64, slot_s=0.5, n_slots=240,
+                         clock=lambda: t[0])
+    uniform = np.full(HEALTH_TRAFFIC_BUCKETS, 100, np.int64)
+    hot = np.zeros(HEALTH_TRAFFIC_BUCKETS, np.int64)
+    hot[0] = HEALTH_TRAFFIC_BUCKETS * 100
+    for _ in range(20):           # stationary history at t in [0, 10)
+        g.accumulate(_mk_stats(traffic_hist=uniform,
+                               n=int(uniform.sum())))
+        t[0] += 0.5
+    tv_before, n_before = g.drift(window_s=5.0)
+    assert n_before > 0 and tv_before < 0.05
+    t[0] += 60.0                  # jump past the window, then shift
+    g.accumulate(_mk_stats(traffic_hist=hot, n=int(hot.sum())))
+    tv_hot, _ = g.drift(window_s=5.0)
+    assert tv_hot > 0.9           # 1 - 1/K of the mass moved
+    tv_life = 0.5 * float(np.abs(
+        g.traffic_total / g.traffic_total.sum()
+        - g.build_hist / g.build_hist.sum()).sum())
+    assert tv_life < 0.1          # lifetime view would have hidden it
+
+
+@pytest.mark.parametrize("n", [64, 1_000, 8_001, 200_000])
+def test_build_rank_hist_matches_device_partition(n):
+    """Host build-time histogram and the device traffic partition use
+    the SAME bucket map r -> r*K//n (awkward n included)."""
+    h = build_rank_hist(n)
+    assert int(h.sum()) == n
+    ranks = np.arange(n, dtype=np.int64)
+    ref = np.bincount(ranks * HEALTH_TRAFFIC_BUCKETS // n,
+                      minlength=HEALTH_TRAFFIC_BUCKETS)
+    np.testing.assert_array_equal(h, ref)
+
+
+def _fake_gen(version, n_keys=1000, max_err=64, name="rmi"):
+    plan_obj = types.SimpleNamespace(name=name,
+                                     bounds=types.SimpleNamespace(
+                                         max_err=max_err))
+    return types.SimpleNamespace(version=version, n_keys=n_keys,
+                                 plan=plan_obj)
+
+
+def test_monitor_routes_by_version_and_bounds_retention():
+    mon = HealthMonitor(keep=3, clock=lambda: 0.0)
+    for v in range(5):
+        mon.on_publish(_fake_gen(v))
+    assert mon.get(0) is None and mon.get(1) is None  # evicted
+    assert mon.current().version == 4
+    # a batch completing against a retired-but-retained generation
+    # lands in ITS record, never the successor's
+    mon.accumulate(3, _mk_stats(n=7, disp_sum=21))
+    assert mon.get(3).n == 7 and mon.get(4).n == 0
+    mon.accumulate(999, _mk_stats(n=5))       # unknown version: dropped
+    assert [r["generation_version"] for r in mon.records()] == \
+        [2.0, 3.0, 4.0]
+
+
+def test_note_delta_compaction_debt_gauge():
+    mon = HealthMonitor(clock=lambda: 0.0)
+    assert mon.snapshot()["compaction_debt"] == 0.0   # pre-publish zeros
+    mon.on_publish(_fake_gen(1))
+    mon.note_delta(48, 64)
+    assert mon.snapshot()["compaction_debt"] == pytest.approx(0.75)
+    mon.on_publish(_fake_gen(2))                      # compaction: resets
+    assert mon.snapshot()["compaction_debt"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# alert engine state machine (satellite: flapping / cooldown / sinks)
+# ---------------------------------------------------------------------------
+RULE = AlertRule("hot", key="x", op=">", threshold=1.0, cooldown_s=10.0)
+
+
+def _engine(rules=(RULE,), sinks=()):
+    t = [0.0]
+    eng = AlertEngine(rules=rules, sinks=sinks, clock=lambda: t[0])
+    return eng, t
+
+
+def test_fire_resolve_refire_cycle():
+    eng, t = _engine()
+    assert eng.evaluate({"x": 0.5}) == []            # ok
+    ev = eng.evaluate({"x": 2.0})                    # fire
+    assert [e["state"] for e in ev] == ["firing"]
+    assert eng.firing() == ["hot"]
+    assert eng.evaluate({"x": 2.0}) == []            # steady: no re-emit
+    t[0] = 20.0
+    ev = eng.evaluate({"x": 0.5})                    # resolve
+    assert [e["state"] for e in ev] == ["resolved"]
+    assert eng.firing() == []
+    t[0] = 40.0
+    ev = eng.evaluate({"x": 3.0})                    # cooled: re-fire emits
+    assert [e["state"] for e in ev] == ["firing"]
+    st = eng.state()["hot"]
+    assert st["n_fired"] == 2 and st["n_resolved"] == 1
+
+
+def test_flap_inside_cooldown_suppresses_then_late_emits():
+    eng, t = _engine()
+    eng.evaluate({"x": 2.0})                         # fire @ t=0, emitted
+    t[0] = 1.0
+    eng.evaluate({"x": 0.5})                         # resolve (emitted)
+    t[0] = 2.0
+    assert eng.evaluate({"x": 2.0}) == []            # re-fire SUPPRESSED
+    assert eng.firing() == ["hot"]                   # ...but state is true
+    assert eng.state()["hot"]["n_suppressed"] == 1
+    t[0] = 11.0                                      # cooldown expired,
+    ev = eng.evaluate({"x": 2.0})                    # still firing: late emit
+    assert [e["state"] for e in ev] == ["firing"]
+    assert eng.evaluate({"x": 2.0}) == []            # delivered exactly once
+
+
+def test_flap_that_resolves_first_is_cancelled_silently():
+    eng, t = _engine()
+    eng.evaluate({"x": 2.0})
+    t[0] = 1.0
+    eng.evaluate({"x": 0.5})
+    t[0] = 2.0
+    eng.evaluate({"x": 2.0})                         # suppressed fire
+    t[0] = 3.0
+    ev = eng.evaluate({"x": 0.5})                    # resolved before expiry
+    assert ev == []                                  # the whole flap: silent
+    assert eng.firing() == []
+    t[0] = 30.0
+    assert eng.evaluate({"x": 0.5}) == []            # nothing pending
+
+
+def test_multiple_rules_on_one_key_fire_independently():
+    r_warn = AlertRule("warn_x", key="x", op=">", threshold=1.0)
+    r_crit = AlertRule("crit_x", key="x", op=">", threshold=5.0,
+                       severity="critical")
+    eng, _ = _engine(rules=(r_warn, r_crit))
+    eng.evaluate({"x": 2.0})
+    assert eng.firing() == ["warn_x"]
+    assert not eng.has_critical_firing()
+    eng.evaluate({"x": 9.0})
+    assert set(eng.firing()) == {"warn_x", "crit_x"}
+    assert eng.has_critical_firing()
+    assert eng.firing(severity="critical") == ["crit_x"]
+
+
+def test_sink_failure_is_isolated_per_event_and_counted():
+    good = []
+
+    def bad_sink(event):
+        raise RuntimeError("pager down")
+
+    eng, _ = _engine(rules=(RULE, AlertRule("hot2", key="y", op=">",
+                                            threshold=1.0)),
+                     sinks=(bad_sink, good.append))
+    ev = eng.evaluate({"x": 2.0, "y": 2.0})
+    assert len(ev) == 2                      # evaluation unharmed
+    assert [e["rule"] for e in good] == ["hot", "hot2"]   # good sink: all
+    assert eng.n_sink_errors == 2            # bad sink: counted per event
+    assert eng.firing() == ["hot", "hot2"]
+
+
+def test_min_samples_gate_and_absent_key_abstain():
+    r = AlertRule("gated", key="x", op=">", threshold=1.0,
+                  min_samples_key="n", min_samples=100)
+    eng, _ = _engine(rules=(r,))
+    assert eng.evaluate({"x": 99.0, "n": 5}) == []   # cold: abstains
+    assert eng.firing() == []
+    assert eng.evaluate({"n": 500}) == []            # key absent: abstains
+    ev = eng.evaluate({"x": 99.0, "n": 500})         # warm: fires
+    assert [e["rule"] for e in ev] == ["gated"]
+    assert eng.evaluate({"x": 99.0, "n": 5}) == [] and \
+        eng.firing() == ["gated"]                    # re-gated: state sticks
+
+
+def test_rule_validation_rejects_bad_op_and_severity():
+    with pytest.raises(ValueError):
+        AlertRule("bad", key="x", op="~")
+    with pytest.raises(ValueError):
+        AlertRule("bad", key="x", severity="page-everyone")
+
+
+def test_default_rules_quiet_on_cold_snapshot():
+    """The shipped ruleset never fires on an idle just-built service
+    snapshot (every rule is sample-gated or keyed on zero defaults)."""
+    eng = AlertEngine(rules=default_rules())
+    snap = dict(health_mod._zero_snapshot())
+    snap.update(window_slo_budget_burn=0.0, window_n=0.0,
+                cache_hit_rate=0.0, cache_accesses=0.0,
+                inflight_saturation=0.0, batches=0.0, trace_dropped=0.0)
+    assert eng.evaluate(snap) == [] and eng.firing() == []
+
+
+# ---------------------------------------------------------------------------
+# export surfaces
+# ---------------------------------------------------------------------------
+def test_prometheus_nonfinite_values_render_per_exposition_format():
+    text = prometheus_text({"a": float("inf"), "b": float("-inf"),
+                            "c": float("nan"), "d": 1.0})
+    assert "repro_lookup_a +Inf" in text
+    assert "repro_lookup_b -Inf" in text
+    assert "repro_lookup_c NaN" in text
+    assert "inf\n" not in text and "nan\n" not in text
+
+
+def _get(base_url, path):
+    with urllib.request.urlopen(base_url + path, timeout=10) as r:
+        return r.status, r.read().decode()
+
+
+@functools.lru_cache(maxsize=None)
+def _small_keys():
+    return sosd.generate("amzn", N_KEYS, seed=3)
+
+
+def test_http_health_endpoints_and_healthz_semantics():
+    keys = _small_keys()
+    svc = LookupService(keys, LookupServiceConfig(
+        index="rmi", hyper=dict(branching=256), max_batch=256))
+    with MetricsServer(svc, port=0) as srv:
+        url = f"http://127.0.0.1:{srv.port}"
+        # not started: the flusher is down -> 503, honest about why
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(url, "/healthz")
+        assert ei.value.code == 503
+        doc = json.loads(ei.value.read().decode())
+        assert doc["serving"] is False and doc["critical"] == []
+
+        with svc:
+            got = svc.lookup(sosd.make_queries(keys, 600, seed=5))
+            assert got.shape == (600,)
+            status, body = _get(url, "/healthz")
+            assert status == 200
+            assert json.loads(body)["status"] == "ok"
+
+            status, body = _get(url, "/health.json")
+            doc = json.loads(body)
+            assert status == 200
+            assert doc["snapshot"]["health_n"] >= 600
+            assert doc["snapshot"]["disp_p99_ratio"] > 0.0
+            assert len(doc["generations"]) == 1
+            assert doc["alerts"]["firing"] == []
+
+            status, body = _get(url, "/alerts.json")
+            doc = json.loads(body)
+            assert status == 200
+            assert {r["name"] for r in doc["rules"]} >= \
+                {"workload_drift", "error_inflation", "slo_burn"}
+            assert doc["firing"] == []
+
+            # malformed window_s is the client's error: 400, not 500
+            for path in ("/metrics?window_s=potato",
+                         "/health.json?window_s=potato"):
+                with pytest.raises(urllib.error.HTTPError) as ei:
+                    _get(url, path)
+                assert ei.value.code == 400
+
+            # a firing CRITICAL rule flips liveness to 503 while serving
+            svc.alerts.add_rule(AlertRule(
+                "always", key="serving", op=">=", threshold=0.0,
+                severity="critical"))
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(url, "/healthz")
+            assert ei.value.code == 503
+            doc = json.loads(ei.value.read().decode())
+            assert doc["serving"] is True and "always" in doc["critical"]
+
+
+def test_jsonl_logger_survives_sink_outage(tmp_path):
+    keys = _small_keys()
+    svc = LookupService(keys, LookupServiceConfig(max_batch=256))
+    bad = JsonlMetricsLogger(svc, str(tmp_path), interval_s=60.0)
+    assert bad.write_once() is False       # path is a directory: fails
+    assert bad.write_once() is False       # ...and keeps failing quietly
+    assert bad.n_errors == 2 and bad.n_written == 0
+    good = JsonlMetricsLogger(svc, str(tmp_path / "m.jsonl"),
+                              interval_s=60.0)
+    assert good.write_once() is True
+    with open(tmp_path / "m.jsonl") as f:
+        doc = json.loads(f.readline())
+    assert "health" in doc and doc["alerts_firing"] == []
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: drift alert on both executors; mutable lifecycle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("executor", ["sync", "async"])
+def test_drift_alert_fires_on_skew_silent_on_stationary(executor):
+    """The §15 e2e acceptance cell: stationary traffic keeps every
+    alert quiet; a mid-run hot-spot shift raises `workload_drift` (and
+    positions stay correct throughout — the instrumented path serves
+    the answers)."""
+    keys = _small_keys()
+    svc = LookupService(keys, LookupServiceConfig(
+        index="rmi", hyper=dict(branching=256), max_batch=512,
+        executor=executor, warm_buckets=(512,)))
+    with svc:
+        q = sosd.make_queries(keys, 1_024, seed=5, present_frac=0.7)
+        np.testing.assert_array_equal(svc.lookup(q),
+                                      np.searchsorted(keys, q))
+        svc.check_alerts(window_s=3600.0)
+        assert "workload_drift" not in svc.alerts.firing()
+        snap = svc.health_snapshot(window_s=3600.0)
+        assert snap["drift_n"] >= 1_024 and snap["drift_tv"] <= 0.6
+
+        # hot-spot shift: every query from the bottom 1/64 of key space.
+        # Age the stationary slots out of the drift window first — the
+        # 1 s read window must hold the shifted traffic ONLY.
+        time.sleep(1.2)
+        hot = np.random.default_rng(0).choice(
+            keys[: max(1, len(keys) // 64)], size=1_024)
+        np.testing.assert_array_equal(svc.lookup(hot),
+                                      np.searchsorted(keys, hot))
+        svc.check_alerts(window_s=1.0)      # tight window: shift only
+        assert "workload_drift" in svc.alerts.firing()
+        assert svc.health_snapshot(window_s=1.0)["drift_tv"] > 0.6
+    assert svc.alerts.state()["workload_drift"]["n_fired"] >= 1
+
+
+def test_health_off_is_bit_identical_and_reports_zeros():
+    keys = _small_keys()
+    q = sosd.make_queries(keys, 700, seed=9, present_frac=0.5)
+    on = LookupService(keys, LookupServiceConfig(max_batch=256))
+    off = LookupService(keys, LookupServiceConfig(max_batch=256,
+                                                  health=False))
+    with on, off:
+        np.testing.assert_array_equal(on.lookup(q), off.lookup(q))
+    assert on.health_snapshot()["health_n"] >= 700
+    snap = off.health_snapshot()
+    assert "health_n" not in snap            # no health keys published
+    assert off.check_alerts() == []          # rules abstain, not crash
+
+
+def test_mutable_compaction_lifecycle_in_health_records():
+    """Inserts grow `compaction_debt`; the post-compaction generation
+    gets its OWN record (debt reset, version advanced) while the
+    retired generation's record survives for post-mortems."""
+    keys = _small_keys()[:4_000]
+    extra = sosd.generate("osm", 600, seed=11)
+    extra = extra[~np.isin(extra, keys)][:512]
+    svc = MutableLookupService(keys, MutableLookupServiceConfig(
+        index="pgm", hyper=dict(eps=32), max_batch=256,
+        compact_threshold=1 << 30))          # manual compaction only
+    with svc:
+        svc.insert(extra).result(30.0)
+        v0 = svc.generation.version
+        debt = svc.health_snapshot()["compaction_debt"]
+        assert debt == pytest.approx(len(extra) / (1 << 30))
+        assert svc.health.current().delta_keys == len(extra)
+        q = sosd.make_queries(keys, 600, seed=5)
+        merged = np.sort(np.concatenate([keys, extra]))
+        np.testing.assert_array_equal(svc.lookup(q),
+                                      np.searchsorted(merged, q))
+        gen = svc.force_compact()
+        assert gen is not None and gen.version > v0
+        snap = svc.health_snapshot()
+        assert snap["compaction_debt"] == 0.0
+        assert snap["generation_version"] == float(gen.version)
+        recs = svc.registry.health_records()
+        assert [int(r["generation_version"]) for r in recs] == \
+            [v0, gen.version]
+        assert recs[0]["health_n"] >= 600    # retired gen kept its stats
+        np.testing.assert_array_equal(svc.lookup(q),
+                                      np.searchsorted(merged, q))

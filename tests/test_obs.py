@@ -414,7 +414,7 @@ def test_traced_service_reconciles_p99_and_ids(executor):
     q = sosd.make_queries(keys, 3_200, seed=5)
     svc = LookupService(keys, LookupServiceConfig(
         index="rmi", hyper=dict(branching=512), max_batch=256,
-        deadline_ms=1.0, executor=executor, trace=True, slo_p99_ms=500.0))
+        deadline_ms=1.0, executor=executor, trace=True, slo_p99_ms=5000.0))
     with svc:
         futs = [svc.submit(q[i:i + 64]) for i in range(0, len(q), 64)]
         for f in futs:
@@ -437,7 +437,10 @@ def test_traced_service_reconciles_p99_and_ids(executor):
     # the windowed surface saw the same traffic (full-history window)
     w = svc.metrics.windowed(window_s=svc.metrics.windows.max_window_s)
     assert w["lookups"] == len(q)
-    assert w["slo_violations"] == 0         # 500ms target: nothing burns
+    # a target generous vs the first batch's compile (the sync path pays
+    # first-touch lowering of the instrumented executable in-band, §15)
+    # burns nothing
+    assert w["slo_violations"] == 0
     # serve-side spans exist for the executor that ran
     cats = {e.get("cat") for e in trace["traceEvents"] if e["ph"] != "M"}
     assert "serve" in cats and "admission" in cats

@@ -261,7 +261,8 @@ def test_double_buffering_overlaps_inflight_slots(cell):
     svc = _svc(keys, "async", max_batch=64, slots=3)
     real_finalize = svc.dispatcher.finalize
     svc.dispatcher.finalize = (
-        lambda out, m: (time.sleep(0.02), real_finalize(out, m))[1])
+        lambda out, m, **kw: (time.sleep(0.02),
+                              real_finalize(out, m, **kw))[1])
     with svc:
         futs = [svc.submit(q[i * 64:(i + 1) * 64]) for i in range(12)]
         got = np.concatenate([f.result(60.0) for f in futs])
@@ -395,8 +396,9 @@ def test_hot_swap_races_inflight_slot_old_generation_wins(cell):
 def test_executable_cache_unit_semantics():
     cache = ExecutableCache()
     ctx_key = (7,)
-    ctx = type("C", (), {})()       # duck-typed: only .key/.bind are read
-    ctx.key, ctx.bind = ctx_key, ()
+    # duck-typed: only .key/.bind/.instrumented are read
+    ctx = type("C", (), {})()
+    ctx.key, ctx.bind, ctx.instrumented = ctx_key, (), False
     fn = lambda q: q                # no .lower: stored as-is  # noqa: E731
     got = cache.get(ctx, "read", 0, 128, lambda: fn, dispatcher=None,
                     warm=True)
@@ -408,7 +410,7 @@ def test_executable_cache_unit_semantics():
     cache.get(ctx, "read", 0, 256, lambda: fn, None)
     assert cache.counters() == (1, 1)       # new bucket: serving miss
     ctx2 = type("C", (), {})()
-    ctx2.key, ctx2.bind = (8,), ()
+    ctx2.key, ctx2.bind, ctx2.instrumented = (8,), (), False
     cache.get(ctx2, "read", 0, 128, lambda: fn, None)
     assert len(cache) == 3
     assert cache.invalidate(keep_version=8) == 2    # both v7 entries die

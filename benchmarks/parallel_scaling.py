@@ -10,12 +10,28 @@ cache-miss-per-second proxy is bytes_touched * throughput.
 Mode (c) uses every local device (1 on this CPU container — the row then
 records the sharded-path overhead; on a TPU slice or with
 ``--xla_force_host_platform_device_count`` it records real scaling).
+
+Mode (d), enabled by ``--topology routed`` (or ``both`` for the A/B),
+measures the range-routed shard mesh (DESIGN.md §16) against broadcast
+dispatch through the full serving stack: per-shard tuned indexes,
+scatter/gather micro-batching, and the per-device-work reduction
+O(batch) -> O(batch/shards).  Rows carry per-device keys and request
+p99 so the routed-vs-broadcast column is a like-for-like comparison.
 """
 from __future__ import annotations
 
 import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/parallel_scaling.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 from benchmarks import _common as C
+
+#: Shard count of the routed topology cells (SERVE_SHARDS env overrides).
+N_SHARDS = int(os.environ.get("SERVE_SHARDS", 4))
 
 
 def _shard_queries(q, mesh):
@@ -28,7 +44,56 @@ def _shard_queries(q, mesh):
     return jax.device_put(q, SH.act_sharding(q.shape, ("batch",), mesh))
 
 
-def run(ds="amzn", out_dir="benchmarks/results", backend=None):
+def _topology_cell(keys, q, sp, shards, backend, batch=4096):
+    """One serving-stack cell: throughput, per-device keys, request p99."""
+    import numpy as np
+    from repro.serve.lookup import LookupService, LookupServiceConfig
+
+    import time
+
+    svc = LookupService(keys, LookupServiceConfig(
+        spec=sp, max_batch=batch, deadline_ms=0.0, executor="sync",
+        backend=backend or C.BACKEND, shards=shards))
+    per_req = 64
+    m = (len(q) // per_req) * per_req
+    svc.lookup(np.asarray(q[:per_req]))        # compile + warm every lane
+    t0 = time.perf_counter()
+    for i in range(0, m, per_req):
+        svc.lookup(np.asarray(q[i:i + per_req]))
+    secs = time.perf_counter() - t0
+    snap = svc.metrics.snapshot()
+    dev_keys = per_req / max(svc.dispatcher.n_shards, 1)
+    return (m / secs, dev_keys, snap["p99_request_ms"])
+
+
+def _topology_rows(ds, keys, q, backend, topology):
+    """Mode (d): routed shard mesh vs broadcast through the serving
+    stack (DESIGN.md §16).  Emits one row per (index, topology) with
+    per-device keys and request p99 in the trailing columns."""
+    from repro.core.spec import IndexSpec
+
+    rows = []
+    shard_axis = {"routed": [N_SHARDS], "both": [1, N_SHARDS]}[topology]
+    for sp in [IndexSpec("rmi", dict(branching=1024)),
+               IndexSpec("pgm", dict(eps=64))]:
+        ab = {}
+        for shards in shard_axis:
+            topo = "routed" if shards > 1 else "broadcast"
+            tput, dev_keys, p99 = _topology_cell(keys, q, sp, shards,
+                                                 backend)
+            ab[topo] = tput
+            rows.append(["topology_" + topo, sp.index, shards,
+                         round(tput / 1e6, 3), "",
+                         round(dev_keys, 1), round(p99, 3)])
+        if len(ab) == 2:
+            print(f"  A/B {sp.index}: routed/broadcast throughput "
+                  f"{ab['routed'] / ab['broadcast']:.2f}x, per-device "
+                  f"keys {1 / N_SHARDS:.2f}x", flush=True)
+    return rows
+
+
+def run(ds="amzn", out_dir="benchmarks/results", backend=None,
+        topology="broadcast"):
     import numpy as np
     import jax.numpy as jnp
     from repro.core import analysis
@@ -80,11 +145,24 @@ def run(ds="amzn", out_dir="benchmarks/results", backend=None):
         secs = C.time_lookup(fn, qm)
         rows.append(["sharded_dispatch", b.name, n_dev,
                      round(m / secs / 1e6, 3), ""])
+    # (d) serving topology A/B: routed shard mesh vs broadcast
+    if topology in ("routed", "both"):
+        rows += _topology_rows(ds, keys, q, backend, topology)
+    rows = [r + [""] * (7 - len(r)) for r in rows]
     C.emit(rows, header=["mode", "index", "x", "mlookups_per_s",
-                         "gbytes_touched_per_s"],
+                         "gbytes_touched_per_s", "per_device_keys",
+                         "p99_request_ms"],
            path=os.path.join(out_dir, "parallel_scaling.csv"))
     return rows
 
 
 if __name__ == "__main__":
-    run(backend=C.backend_arg())
+    import argparse
+
+    _ap = argparse.ArgumentParser(add_help=False)
+    _ap.add_argument("--topology", choices=("broadcast", "routed", "both"),
+                     default="broadcast",
+                     help="add mode (d): serve-stack cells comparing the "
+                          "range-routed shard mesh to broadcast dispatch")
+    _opts, _ = _ap.parse_known_args()
+    run(backend=C.backend_arg(), topology=_opts.topology)

@@ -24,8 +24,16 @@ blocking double buffering, bounded in-flight slot ring.  Same requests,
 same bit-exact results; the p99_request_ms column is the number the
 async executor exists to shrink.
 
+``--topology`` adds the DESIGN.md §16 axis: "routed" serves every cell
+through the range-routed shard mesh (``SERVE_SHARDS`` per-range indexes,
+scatter/gather dispatch), "both" emits routed-vs-broadcast A/B rows —
+``per_device_keys`` is the O(batch) -> O(batch/shards) column.
+
     PYTHONPATH=src python benchmarks/serve_throughput.py
     PYTHONPATH=src python benchmarks/serve_throughput.py --executor async --smoke
+    PYTHONPATH=src python benchmarks/serve_throughput.py --topology both --executor async
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python benchmarks/serve_throughput.py --smoke --topology routed
 
 ``--smoke`` runs one tiny sync-vs-async cell and exits nonzero if the
 async positions diverge from sync by one bit or the warmed executable
@@ -73,7 +81,9 @@ BATCH_POINTS = [(512, 32), (4096, 256)]
 #: (repro.serve.lookup.default_spec — same table the serve driver uses)
 INDEX_NAMES = ["rmi", "pgm", "radix_spline"]
 
-DATASETS = ["amzn", "face", "osm", "wiki"]
+#: SERVE_DATASETS trims the sweep (comma-separated) for CI-sized runs
+DATASETS = [d for d in os.environ.get(
+    "SERVE_DATASETS", "amzn,face,osm,wiki").split(",") if d]
 
 #: dispatch-engine axis (DESIGN.md §13)
 EXECUTORS = ["sync", "async"]
@@ -85,7 +95,8 @@ N_SERVE_Q = int(os.environ.get("SERVE_Q", min(C.N_QUERIES, 10_000)))
 
 def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
               backend: str = "jnp", executor: str = "sync",
-              trace: bool = False, health: bool = True, queries=None):
+              trace: bool = False, health: bool = True, queries=None,
+              shards: int = 1, replicas: int = 1):
     import jax.numpy as jnp
     from repro.serve.lookup import LookupService, LookupServiceConfig
 
@@ -96,6 +107,7 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
     svc = LookupService(keys, LookupServiceConfig(
         spec=spec.replace(backend=backend),
         max_batch=max_batch, deadline_ms=2.0, executor=executor,
+        shards=shards, replicas=replicas,
         trace=trace, health=health))
     build_s = time.perf_counter() - t0
 
@@ -107,10 +119,15 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
 
     # verify against a direct single-device plan lookup on the JNP
     # backend — cross-backend when the service runs pallas, and reusing
-    # the generation's own plan (per-plan compile cache, no re-lowering)
-    direct = np.asarray(
-        svc.generation.plan.compile(backend="jnp")(jnp.asarray(q)),
-        dtype=np.int64)
+    # the generation's own plan (per-plan compile cache, no re-lowering).
+    # A routed generation has no single global plan: verify against the
+    # host lower-bound oracle instead (same global-rank contract).
+    if shards > 1:
+        direct = np.searchsorted(keys, q, side="left").astype(np.int64)
+    else:
+        direct = np.asarray(
+            svc.generation.plan.compile(backend="jnp")(jnp.asarray(q)),
+            dtype=np.int64)
     verified = bool(np.array_equal(got, direct))
 
     snap = svc.metrics.snapshot()
@@ -125,6 +142,13 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
         "n_keys": int(len(keys)),
         "n_queries": int(len(q)),
         "n_shards": svc.dispatcher.n_shards,
+        # routed-vs-broadcast A/B columns (DESIGN.md §16): which path the
+        # cell dispatched, per-device work (keys per shard lane — O(batch)
+        # broadcast, O(batch/shards) routed), and the observed route skew
+        "topology": "routed" if shards > 1 else "broadcast",
+        "per_device_keys": round(snap["lookups"]
+                                 / max(svc.dispatcher.n_shards, 1), 1),
+        "route_skew": round(snap["route_skew"], 3),
         "build_s": round(build_s, 4),
         "lookups_per_s": round(snap["lookups_per_s"], 1),
         "mean_batch_ms": round(snap["mean_batch_ms"], 4),
@@ -156,12 +180,20 @@ def _run_cell(ds: str, spec, max_batch: int, request_keys: int,
     return row, got, svc
 
 
+#: shard count of the routed topology cells (DESIGN.md §16)
+N_SHARDS = int(os.environ.get("SERVE_SHARDS", 4))
+
+
 def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
-        autotune=None, executor: str = "both"):
+        autotune=None, executor: str = "both",
+        topology: str = "broadcast"):
     """Sweep the service.  ``spec`` pins ONE declarative IndexSpec for
     every cell; ``autotune`` (a byte budget) lets the `spec.Tuner` pick
     the per-dataset spec+backend instead of the serving defaults;
-    ``executor`` picks one engine or "both" (the §13 A/B columns).
+    ``executor`` picks one engine or "both" (the §13 A/B columns);
+    ``topology`` picks broadcast dispatch, the range-routed shard mesh
+    (``SERVE_SHARDS`` ranges, §16), or "both" (the routed-vs-broadcast
+    A/B columns: per-device work, throughput, p99).
 
     Every row also carries the §14.3 stage-decomposition columns —
     measured predict vs bounded-search ns/lookup for the cell's
@@ -173,6 +205,8 @@ def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
 
     backend = backend or C.BACKEND
     executors = EXECUTORS if executor == "both" else [executor]
+    topologies = (["broadcast", "routed"] if topology == "both"
+                  else [topology])
     rows = []
     stage_cache = {}
     for ds in DATASETS:
@@ -189,31 +223,46 @@ def run(out_dir: str = "benchmarks/results", backend=None, spec=None,
                                 and spec is None) else backend
             for max_batch, request_keys in BATCH_POINTS:
                 for ex in executors:
-                    r, _, svc = _run_cell(ds, sp, max_batch, request_keys,
-                                          backend=be, executor=ex)
-                    sk = (ds, sp.index, be)
-                    if sk not in stage_cache:
-                        prof = profile_generation(
-                            svc.generation, C.queries(ds)[:N_SERVE_Q])
-                        stage_cache[sk] = {
-                            k: (round(v, 2) if isinstance(v, float) else v)
-                            for k, v in prof.items()
-                            if k.startswith(("stage_", "proxy_",
-                                             "cost_model", "avg_width"))}
-                    r.update(stage_cache[sk])
-                    rows.append(r)
-                    print(f"{ds:5s} {r['index']:12s} {ex:5s} "
-                          f"batch={max_batch:5d} "
-                          f"{r['lookups_per_s']/1e3:9.1f} klookups/s  "
-                          f"p99_req={r['p99_request_ms']:8.2f}ms  "
-                          f"predict/search="
-                          f"{r['stage_predict_ns']:.0f}/"
-                          f"{r['stage_search_ns']:.0f}ns  "
-                          f"hit={r['cache_hit_rate']:.2f}  occ="
-                          f"{r['mean_occupancy']:.2f}  "
-                          f"verified={r['verified_vs_core']}", flush=True)
+                    for topo in topologies:
+                        shards = N_SHARDS if topo == "routed" else 1
+                        r, _, svc = _run_cell(ds, sp, max_batch,
+                                              request_keys, backend=be,
+                                              executor=ex, shards=shards)
+                        sk = (ds, sp.index, be)
+                        if sk not in stage_cache:
+                            # the profiler reads one single-plan
+                            # generation: probe a broadcast build (a
+                            # routed-only sweep builds one throwaway)
+                            if shards == 1:
+                                gen = svc.generation
+                            else:
+                                from repro.serve.lookup import IndexRegistry
+                                gen = IndexRegistry().build_and_publish(
+                                    sp.replace(backend=be), C.dataset(ds))
+                            prof = profile_generation(
+                                gen, C.queries(ds)[:N_SERVE_Q])
+                            stage_cache[sk] = {
+                                k: (round(v, 2)
+                                    if isinstance(v, float) else v)
+                                for k, v in prof.items()
+                                if k.startswith(("stage_", "proxy_",
+                                                 "cost_model",
+                                                 "avg_width"))}
+                        r.update(stage_cache[sk])
+                        rows.append(r)
+                        print(f"{ds:5s} {r['index']:12s} {ex:5s} "
+                              f"{topo:9s} batch={max_batch:5d} "
+                              f"{r['lookups_per_s']/1e3:9.1f} klookups/s  "
+                              f"p99_req={r['p99_request_ms']:8.2f}ms  "
+                              f"dev_keys={r['per_device_keys']:9.0f}  "
+                              f"hit={r['cache_hit_rate']:.2f}  occ="
+                              f"{r['mean_occupancy']:.2f}  "
+                              f"verified={r['verified_vs_core']}",
+                              flush=True)
     if executor == "both":
         _print_speedups(rows)
+    if topology == "both":
+        _print_topology_ab(rows)
     path = os.path.join(out_dir, "serve_throughput.json")
     os.makedirs(out_dir, exist_ok=True)
     with open(path, "w") as f:
@@ -248,10 +297,40 @@ def _print_speedups(rows):
               flush=True)
 
 
+def _print_topology_ab(rows):
+    """Routed-vs-broadcast A/B per cell (§16): per-device work,
+    throughput, and request p99 side by side."""
+    cells = {}
+    for r in rows:
+        k = (r["dataset"], r["index"], r["max_batch"], r["executor"])
+        cells.setdefault(k, {})[r["topology"]] = r
+    t_ratios, p_ratios = [], []
+    for (ds, ix, mb, ex), pair in sorted(cells.items()):
+        if "broadcast" not in pair or "routed" not in pair:
+            continue
+        b, rt = pair["broadcast"], pair["routed"]
+        t_ratio = (rt["lookups_per_s"] / b["lookups_per_s"]
+                   if b["lookups_per_s"] else float("inf"))
+        p_ratio = (b["p99_request_ms"] / rt["p99_request_ms"]
+                   if rt["p99_request_ms"] else float("inf"))
+        t_ratios.append(t_ratio)
+        p_ratios.append(p_ratio)
+        print(f"  routed A/B {ds:5s} {ix:12s} {ex:5s} batch={mb:5d}: "
+              f"dev_keys {b['per_device_keys']:9.0f} -> "
+              f"{rt['per_device_keys']:9.0f}  "
+              f"tput {t_ratio:5.2f}x  p99 {p_ratio:5.2f}x", flush=True)
+    if t_ratios:
+        print(f"  routed throughput median {np.median(t_ratios):.2f}x, "
+              f"p99 speedup median {np.median(p_ratios):.2f}x "
+              f"over broadcast", flush=True)
+
+
 #: committed perf baseline + the snapshot each smoke writes beside the
 #: other benchmark results
 BASELINE_PATH = "benchmarks/baselines/serve_smoke_baseline.json"
 SMOKE_METRICS_PATH = "benchmarks/results/serve_smoke_metrics.json"
+ROUTED_SMOKE_METRICS_PATH = \
+    "benchmarks/results/serve_smoke_routed_metrics.json"
 
 #: tolerance bands for --check-baseline.  Deliberately generous: CI
 #: containers vary widely in CPU quality, and the tripwire exists to
@@ -468,20 +547,194 @@ def smoke(backend=None, executor: str = "async",
           flush=True)
 
 
+def routed_smoke(backend=None, check_baseline: bool = False,
+                 shards: int = 0) -> None:
+    """Routed-topology CI tripwire (DESIGN.md §16), exit NONZERO when:
+    (a) routed dispatch (sync OR async) differs from broadcast sync by
+    even one bit, on ANY index cell, (b) either diverges from the direct
+    `repro.core` lookup, (c) `/health.json` is missing a per-shard
+    health record (or `/metrics.json` / the Prometheus text is missing
+    the ``shard``-labelled load rows), (d) the per-bucket host staging
+    buffers keep allocating batch after batch (the pinned-staging
+    contract), or (e) with ``check_baseline``, the routed cell regresses
+    past the committed baseline's ``routed`` bands.  Run it forced
+    multi-device (``XLA_FLAGS=--xla_force_host_platform_device_count=N``)
+    to exercise real shard placement."""
+    import urllib.request
+
+    import jax
+
+    from repro.obs.export import MetricsServer
+    from repro.serve.lookup import default_spec
+
+    backend = backend or C.BACKEND
+    shards = shards or N_SHARDS
+    print(f"routed smoke: {shards} shards over {jax.device_count()} "
+          f"device(s)", flush=True)
+
+    svc_keep, row_keep, row_bcast = None, None, None
+    for ix in INDEX_NAMES:
+        sp = default_spec(ix)
+        row_b, got_b, _ = _run_cell("amzn", sp, 512, 32, backend=backend,
+                                    executor="sync")
+        row_rs, got_rs, _ = _run_cell("amzn", sp, 512, 32, backend=backend,
+                                      executor="sync", shards=shards)
+        row_ra, got_ra, svc = _run_cell("amzn", sp, 512, 32,
+                                        backend=backend, executor="async",
+                                        shards=shards)
+        for tag, got in (("sync", got_rs), ("async", got_ra)):
+            if not np.array_equal(got_b, got):
+                raise SystemExit(
+                    f"routed {tag} dispatch DIVERGED from broadcast on "
+                    f"{ix}: {int(np.sum(got_b != got))}/{got_b.size} "
+                    f"positions differ")
+        if not (row_rs["verified_vs_core"] and row_ra["verified_vs_core"]):
+            raise SystemExit(f"routed positions diverged from repro.core "
+                             f"on {ix}")
+        print(f"  {ix:12s}: routed == broadcast ({got_b.size} positions, "
+              f"sync+async), dev_keys "
+              f"{row_b['per_device_keys']:.0f} -> "
+              f"{row_ra['per_device_keys']:.0f}, "
+              f"skew {row_ra['route_skew']:.2f}", flush=True)
+        if ix == INDEX_NAMES[0]:
+            # same-executor broadcast reference for the A/B section
+            row_ba, got_ba, _ = _run_cell("amzn", sp, 512, 32,
+                                          backend=backend,
+                                          executor="async")
+            if not np.array_equal(got_b, got_ba):
+                raise SystemExit("broadcast async diverged from sync")
+            svc_keep, row_keep, row_bcast = svc, row_ra, row_ba
+        else:
+            svc.stop()
+
+    # -- per-shard observability over the real HTTP surface ------------
+    svc = svc_keep
+    n_shards = svc.dispatcher.n_shards
+    with MetricsServer(svc) as srv:
+        def _get(path):
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{srv.port}{path}") as resp:
+                return resp.read().decode()
+        hdoc = json.loads(_get("/health.json"))
+        mdoc = json.loads(_get("/metrics.json"))
+        prom = _get("/metrics")
+    seen = {g["shard"] for g in hdoc.get("generations", [])
+            if "shard" in g}
+    if seen != set(range(n_shards)):
+        raise SystemExit(f"/health.json missing per-shard health "
+                         f"records: got shards {sorted(seen)}, want "
+                         f"0..{n_shards - 1}")
+    shard_rows = mdoc.get("per_shard", [])
+    if {r["shard"] for r in shard_rows} != set(range(n_shards)):
+        raise SystemExit("/metrics.json per_shard rows incomplete: "
+                         + json.dumps(shard_rows))
+    if 'repro_lookup_shard_keys{shard="0"}' not in prom:
+        raise SystemExit("Prometheus text missing shard-labelled "
+                         "families")
+    print(f"  per-shard surfaces ok ({n_shards} shard records in "
+          f"/health.json; shard-labelled /metrics + /metrics.json)",
+          flush=True)
+
+    # -- pinned host staging: steady-state batches must not allocate ---
+    q = C.queries("amzn")[:N_SERVE_Q]
+    chunks = [q[i:i + 32] for i in range(0, len(q), 32)]
+
+    def _wave():
+        with svc:
+            for f in [svc.submit(c) for c in chunks]:
+                f.result(timeout=120.0)
+    _wave()                                # settle any leftover buckets
+    a0, h0 = svc.dispatcher.staging_allocs, svc.dispatcher.staging_hits
+    _wave()
+    a1, h1 = svc.dispatcher.staging_allocs, svc.dispatcher.staging_hits
+    if a1 != a0:
+        raise SystemExit(f"per-batch host staging allocation grew under "
+                         f"steady traffic: {a0} -> {a1} buffers")
+    print(f"  staging steady: {a1} pinned buffers, "
+          f"{h1 - h0} reuses over the assertion wave", flush=True)
+    svc.stop()
+
+    metrics = {
+        "cell": {"dataset": "amzn", "index": INDEX_NAMES[0],
+                 "max_batch": 512, "request_keys": 32,
+                 "executor": "async", "backend": backend,
+                 "shards": n_shards,
+                 "n_queries": row_keep["n_queries"]},
+        "routed": {
+            "lookups_per_s": row_keep["lookups_per_s"],
+            "p99_request_ms": row_keep["p99_request_ms"],
+            "per_device_keys": row_keep["per_device_keys"],
+            "route_skew": row_keep["route_skew"],
+            "cache_hit_rate": row_keep["cache_hit_rate"],
+        },
+        "broadcast": {
+            "lookups_per_s": row_bcast["lookups_per_s"],
+            "p99_request_ms": row_bcast["p99_request_ms"],
+            "per_device_keys": row_bcast["per_device_keys"],
+        },
+    }
+    os.makedirs(os.path.dirname(ROUTED_SMOKE_METRICS_PATH), exist_ok=True)
+    with open(ROUTED_SMOKE_METRICS_PATH, "w") as f:
+        json.dump(metrics, f, indent=1)
+    print(f"  wrote {ROUTED_SMOKE_METRICS_PATH}", flush=True)
+    if check_baseline:
+        with open(BASELINE_PATH) as f:
+            base = json.load(f)
+        rb = base.get("routed")
+        if rb is None:
+            raise SystemExit(f"--check-baseline: no 'routed' section in "
+                             f"{BASELINE_PATH}")
+        got, want = metrics["routed"], rb
+        p99_ratio = (got["p99_request_ms"] / want["p99_request_ms"]
+                     if want["p99_request_ms"] else float("inf"))
+        tput_ratio = (got["lookups_per_s"] / want["lookups_per_s"]
+                      if want["lookups_per_s"] else 0.0)
+        print(f"  routed baseline: p99 {p99_ratio:.2f}x (limit "
+              f"{BASELINE_MAX_P99_RATIO:.1f}x), throughput "
+              f"{tput_ratio:.2f}x (floor "
+              f"{BASELINE_MIN_THROUGHPUT_RATIO:.1f}x)", flush=True)
+        fails = []
+        if p99_ratio > BASELINE_MAX_P99_RATIO:
+            fails.append(f"routed p99_request_ms regressed "
+                         f"{p99_ratio:.1f}x")
+        if tput_ratio < BASELINE_MIN_THROUGHPUT_RATIO:
+            fails.append(f"routed lookups_per_s fell to "
+                         f"{tput_ratio:.2f}x")
+        if fails:
+            raise SystemExit("routed perf baseline tripwire: "
+                             + "; ".join(fails))
+        print("  routed baseline check ok", flush=True)
+    print(f"routed smoke ok: {len(INDEX_NAMES)} index cells bit-identical "
+          f"to broadcast on sync+async over {jax.device_count()} "
+          f"device(s)", flush=True)
+
+
 if __name__ == "__main__":
     _ns = C.bench_args()
     _ap = argparse.ArgumentParser(add_help=False)
     _ap.add_argument("--executor", choices=("sync", "async", "both"),
                      default="both")
+    _ap.add_argument("--topology",
+                     choices=("broadcast", "routed", "both"),
+                     default="broadcast",
+                     help="dispatch topology axis (DESIGN.md §16): "
+                          "broadcast, range-routed shard mesh "
+                          "(SERVE_SHARDS ranges), or both (A/B rows); "
+                          "with --smoke, 'routed' runs the routed parity "
+                          "+ per-shard observability tripwire")
     _ap.add_argument("--check-baseline", action="store_true",
                      help="hold the smoke metrics snapshot against "
                           f"{BASELINE_PATH} (nonzero exit on regression)")
     _opts = _ap.parse_known_args()[0]
     _ex = _opts.executor
     if _ns.smoke:
-        smoke(backend=_ns.backend,
-              executor="async" if _ex == "both" else _ex,
-              check_baseline=_opts.check_baseline)
+        if _opts.topology == "routed":
+            routed_smoke(backend=_ns.backend,
+                         check_baseline=_opts.check_baseline)
+        else:
+            smoke(backend=_ns.backend,
+                  executor="async" if _ex == "both" else _ex,
+                  check_baseline=_opts.check_baseline)
     else:
         run(backend=_ns.backend, spec=_ns.spec, autotune=_ns.autotune,
-            executor=_ex)
+            executor=_ex, topology=_opts.topology)

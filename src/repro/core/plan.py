@@ -395,16 +395,21 @@ class LookupPlan:
         return merged_instr
 
     # -- compiled entry points (cached per plan) ---------------------------
-    def _compiled(self, key, make_expr) -> Callable:
+    def _compiled(self, key, make_expr, donate_argnums=()) -> Callable:
         fn = self._cache.get(key)
         if fn is None:
-            fn = jax.jit(make_expr())
+            fn = jax.jit(make_expr(), donate_argnums=donate_argnums)
             self._cache[key] = fn
         return fn
 
     def compile(self, backend: str = "jnp", interpret: bool = False,
-                fused: Optional[bool] = None) -> Callable:
-        """jit'd ``q -> int64 LB ranks`` (the canonical fused lookup)."""
+                fused: Optional[bool] = None,
+                donate: bool = False) -> Callable:
+        """jit'd ``q -> int64 LB ranks`` (the canonical fused lookup).
+
+        ``donate=True`` donates the query buffer to XLA — safe when the
+        caller stages each batch into a fresh/reusable device placement
+        (the dispatcher does); a no-op with a warning on CPU."""
         # normalize fused before keying the cache: the default (None) and
         # its resolved value must alias to ONE compiled program
         if backend != "pallas" or self.point_only:
@@ -412,8 +417,9 @@ class LookupPlan:
         elif fused is None:
             fused = self.fused is not None
         return self._compiled(
-            ("lb", backend, interpret, fused),
-            lambda: self.lb_expr(backend, interpret, fused))
+            ("lb", backend, interpret, fused, donate),
+            lambda: self.lb_expr(backend, interpret, fused),
+            donate_argnums=(0,) if donate else ())
 
     def compile_merged(self, backend: str = "jnp",
                        interpret: bool = False) -> Callable:
@@ -434,10 +440,12 @@ class LookupPlan:
             lambda: self.merged_scan_expr(int(m), backend, interpret))
 
     def compile_instrumented(self, backend: str = "jnp",
-                             interpret: bool = False) -> Callable:
+                             interpret: bool = False,
+                             donate: bool = False) -> Callable:
         return self._compiled(
-            ("instr", backend, interpret),
-            lambda: self.instrumented_expr(backend, interpret))
+            ("instr", backend, interpret, donate),
+            lambda: self.instrumented_expr(backend, interpret),
+            donate_argnums=(0,) if donate else ())
 
     def compile_instrumented_merged(self, backend: str = "jnp",
                                     interpret: bool = False) -> Callable:

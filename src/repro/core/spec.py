@@ -437,6 +437,35 @@ class Tuner:
                           evaluated=evaluated, backend_ns=backend_ns,
                           max_bytes=self.max_bytes, target_ns=self.target_ns)
 
+    def tune_shards(self, keys: np.ndarray, offsets: Sequence[int],
+                    queries: Optional[np.ndarray] = None
+                    ) -> List[TuneResult]:
+        """Tune each contiguous key-range slice independently.
+
+        ``offsets`` is the ShardTopology offset vector (len S+1).  Each
+        shard's ladder search sees only its slice — per-shard models get
+        tighter error bounds for the same byte budget because each slice
+        is a narrower, easier distribution (the RMI root-model idea one
+        level up).  A per-shard ``max_bytes`` of ``self.max_bytes / S``
+        keeps the summed footprint inside the original budget.
+        """
+        keys = np.asarray(keys, dtype=np.uint64)
+        offs = [int(o) for o in offsets]
+        s_eff = len(offs) - 1
+        per = None if self.max_bytes is None else max(
+            1, self.max_bytes // s_eff)
+        sub = dataclasses.replace(self, max_bytes=per)
+        q = None if queries is None else np.asarray(queries, dtype=np.uint64)
+        results: List[TuneResult] = []
+        for s in range(s_eff):
+            sl = keys[offs[s]:offs[s + 1]]
+            qs = None
+            if q is not None:
+                in_range = q[(q >= sl[0]) & (q <= sl[-1])]
+                qs = in_range if in_range.size >= 64 else None
+            results.append(sub.tune(sl, queries=qs))
+        return results
+
     # -- internals -------------------------------------------------------
     def _probe_queries(self, keys: np.ndarray) -> np.ndarray:
         """Mixed present/absent probe stream (seeded; no repro.data

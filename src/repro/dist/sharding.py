@@ -238,3 +238,26 @@ def dispatch_groups(tokens: Optional[int] = None, *, mesh=None,
                 g *= sizes[a]
             return g
     return 1
+
+
+def shard_replica_groups(devices, replicas):
+    """Assign each shard a round-robin group of physical devices.
+
+    ``replicas[s]`` devices per shard, walked over ``devices`` with a
+    running pointer modulo the device count — with S shards on S devices
+    at one replica each, shard s lands exactly on device s; with more
+    replica seats than devices the groups wrap, spreading hot shards over
+    distinct devices first.  Returns a list of per-shard device lists.
+    """
+    devices = list(devices)
+    if not devices:
+        raise ValueError("shard_replica_groups needs at least one device")
+    groups = []
+    ptr = 0
+    for r in replicas:
+        r = int(r)
+        if r < 1:
+            raise ValueError("every shard needs at least one replica")
+        groups.append([devices[(ptr + i) % len(devices)] for i in range(r)])
+        ptr += r
+    return groups

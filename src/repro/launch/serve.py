@@ -84,10 +84,14 @@ def run_lookup(args):
     svc = LookupService(keys, LookupServiceConfig(
         spec=sp, max_batch=args.max_batch,
         deadline_ms=args.deadline_ms, executor=args.executor,
+        shards=args.shards, replicas=args.replicas,
         trace=bool(args.trace_out), slo_p99_ms=args.slo_p99_ms,
         health=not args.no_health))
     print(f"serving spec: {svc.generation.spec.to_json()} "
           f"(executor={args.executor})")
+    topo = getattr(svc.generation, "topology", None)
+    if topo is not None:
+        print(f"topology: {topo.describe()}")
     q = sosd.make_queries(keys, args.requests * args.keys_per_request, seed=2)
 
     with contextlib.ExitStack() as stack:
@@ -143,8 +147,11 @@ def run_lookup(args):
     firing = svc.alerts.firing()
     if not args.no_health:
         h = svc.health_snapshot(max(args.window_s, dt + 1.0))
+        gen = svc.generation
+        max_err = int(getattr(gen, "max_err",
+                              gen.plan.bounds.max_err))
         print(f"health: disp p99 {h['disp_p99']:.0f} of max_err "
-              f"{int(svc.generation.plan.bounds.max_err)} "
+              f"{max_err} "
               f"(bound utilization {h['bound_utilization_p99']:.2f}, "
               f"{h['disp_p99_ratio']:.2f}x build), "
               f"last-mile steps {h['mean_last_mile_steps']:.1f}, "
@@ -184,6 +191,15 @@ def main():
                     help="lookup dispatch engine (DESIGN.md §13): the "
                          "continuous-batching async executor (default) "
                          "or the serial sync reference loop")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="range-routed serving topology (DESIGN.md §16): "
+                         "partition the key space into this many "
+                         "equal-count ranges with per-shard indexes and "
+                         "scatter/gather dispatch (1 = broadcast)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="read fan-out per shard (routed topology only): "
+                         "each shard's lookups round-robin over this many "
+                         "replica lanes")
     # ops surface (lookup mode, DESIGN.md §14)
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="start the HTTP metrics endpoint on this port "

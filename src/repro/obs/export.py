@@ -86,6 +86,11 @@ def metrics_payload(provider, window_s: float = 10.0) -> Dict:
     windowed = getattr(metrics, "windowed", None)
     if windowed is not None:
         payload["windowed"] = windowed(window_s)
+    per_shard = getattr(metrics, "per_shard", None)
+    if per_shard is not None:
+        rows = per_shard()
+        if rows:
+            payload["per_shard"] = rows
     rec = getattr(provider, "recorder", None)
     if rec is not None:
         payload["trace_spans"] = len(rec)
@@ -199,6 +204,11 @@ class MetricsServer:
         if "health" in payload:
             text += prometheus_text(payload["health"],
                                     prefix="repro_lookup_health_")
+        for row in payload.get("per_shard", []):
+            text += prometheus_text(
+                {k: v for k, v in row.items() if k != "shard"},
+                prefix="repro_lookup_shard_",
+                labels={"shard": str(row["shard"])})
         return text
 
     def render_health(self, window_s: Optional[float] = None):

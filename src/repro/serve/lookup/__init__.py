@@ -11,15 +11,18 @@ batches, never inside one.
 """
 from repro.serve.lookup.admission import (ClientBacklogFull, LookupFuture,
                                           MicroBatcher)
-from repro.serve.lookup.dispatch import ShardedDispatcher, make_plan
+from repro.serve.lookup.dispatch import (RoutedContext, RoutedDispatcher,
+                                         ShardedDispatcher, make_plan)
 from repro.serve.lookup.executor import (AsyncContext, AsyncExecutor,
                                          ExecutableCache)
 from repro.serve.lookup.metrics import ServiceMetrics
 from repro.serve.lookup.mutable_service import (MutableLookupService,
                                                 MutableLookupServiceConfig)
-from repro.serve.lookup.registry import Generation, IndexRegistry
+from repro.serve.lookup.registry import (Generation, IndexRegistry,
+                                         RoutedGeneration)
 from repro.serve.lookup.service import (DEFAULT_HYPER, LookupService,
                                         LookupServiceConfig, default_spec)
+from repro.serve.lookup.topology import ShardTopology
 
 __all__ = [
     "DEFAULT_HYPER",
@@ -39,4 +42,8 @@ __all__ = [
     "LookupServiceConfig",
     "MutableLookupService",
     "MutableLookupServiceConfig",
+    "RoutedContext",
+    "RoutedDispatcher",
+    "RoutedGeneration",
+    "ShardTopology",
 ]

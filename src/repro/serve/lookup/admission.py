@@ -87,6 +87,11 @@ class PendingRequest:
     kind: str = "read"        # "read" | "scan" | "insert" (mutable service)
     aux: int = 0              # scan length for kind="scan", else 0
     client: Optional[object] = None   # fairness-cap accounting id
+    #: Admission-time shard routing (DESIGN.md §16): ``(topology, shard
+    #: id per key)`` when a router is installed.  Dispatch consumes it
+    #: only if the topology object is IDENTICAL to the pinned one — a
+    #: hot-swap in between invalidates the tag and dispatch re-routes.
+    route: Optional[tuple] = None
 
 
 class MicroBatcher:
@@ -114,6 +119,12 @@ class MicroBatcher:
         #: (one per rid — the trace's request-id origin) and rejections
         self.recorder = recorder
         self._counter = counter if counter is not None else MonotonicCounter()
+        #: Optional routing hook ``keys -> (topology, shard ids)`` run at
+        #: admission (outside the condition lock) — the vectorized route
+        #: step of the range-routed topology.  Installed/cleared by the
+        #: service's publish hook; best-effort: a failing router admits
+        #: the request untagged and dispatch routes it itself.
+        self.router = None
         self._pending: "collections.deque[PendingRequest]" = collections.deque()
         self._n_keys = 0
         self._client_keys: dict = {}
@@ -145,6 +156,12 @@ class MicroBatcher:
         fut = LookupFuture(rid, keys.size)
         req = PendingRequest(rid, keys, fut, time.perf_counter(),
                              kind=kind, aux=int(aux), client=client)
+        router = self.router
+        if router is not None and kind != "insert":
+            try:
+                req.route = router(keys)
+            except Exception:   # noqa: BLE001 — routing is best-effort here
+                req.route = None
         try:
             with self._cond:
                 if client is not None:

@@ -51,6 +51,7 @@ from typing import Any, Callable, List, Optional, Tuple
 import numpy as np
 
 from repro.obs.trace import maybe_span
+from repro.serve.lookup.dispatch import RoutedContext
 
 __all__ = ["AsyncContext", "AsyncExecutor", "ExecutableCache", "WorkItem"]
 
@@ -109,6 +110,7 @@ class _Slot:
     is_insert: bool = False
     version: int = -1            # generation the stats (if any) belong to
     instrumented: bool = False   # out is (payload, packed health stats)
+    routed: bool = False         # out is a dispatch._RoutedHandle
 
 
 _STOP = object()
@@ -224,13 +226,20 @@ class ExecutableCache:
     def invalidate(self, keep_version=None) -> int:
         """Evict entries; with ``keep_version`` set, only entries whose
         context belongs to another generation go (hot-swap policy: the
-        new generation's warm-up repopulates, old executables die)."""
+        new generation's warm-up repopulates, old executables die).
+        Accepts a single version or an iterable of versions to keep —
+        a routed publish keeps the RoutedGeneration's version AND every
+        per-shard generation version (lane contexts key on those)."""
         with self._mu:
             if keep_version is None:
                 n = len(self._exes)
                 self._exes.clear()
                 return n
-            stale = [k for k in self._exes if k[0][0] != keep_version]
+            keep = (set(keep_version)
+                    if isinstance(keep_version, (set, frozenset, tuple,
+                                                 list))
+                    else {keep_version})
+            stale = [k for k in self._exes if k[0][0] not in keep]
             for k in stale:
                 del self._exes[k]
             return len(stale)
@@ -248,14 +257,18 @@ class ExecutableCache:
         cells = [("read", 0, lambda: ctx.read_fn)]
         cells += [("scan", int(m), (lambda m=m: ctx.scan_fn(int(m))))
                   for m in scan_lengths]
+        host_dummy = {int(b): np.full(int(b), ctx.sample_key, np.uint64)
+                      for b in buckets}
         for bucket in buckets:
-            dummy = dispatcher.place(
-                np.full(int(bucket), ctx.sample_key, np.uint64))
             for kind, aux, make_fn in cells:
                 exe = self.get(ctx, kind, aux, int(bucket), make_fn,
                                dispatcher, warm=True)
                 args = ((np.int32(bucket),)
                         if ctx.instrumented and kind == "read" else ())
+                # fresh placement per cell: a donating executable
+                # invalidates its input buffer, so cells must not share
+                # one placed dummy
+                dummy = dispatcher.place(host_dummy[int(bucket)])
                 jax.block_until_ready(exe(dummy, *args, *ctx.bind))
                 n += 1
         return n
@@ -385,16 +398,24 @@ class AsyncExecutor:
         keys = (group[0].keys if len(group) == 1
                 else np.concatenate([r.keys for r in group]))
         t0 = time.perf_counter()
+        routed = isinstance(item.ctx, RoutedContext)
         try:
             ctx = item.ctx
-            make_fn = ((lambda: ctx.read_fn) if item.kind == "read"
-                       else (lambda: ctx.scan_fn(item.aux)))
-            q, padded = svc.dispatcher.pad_and_place(keys)
-            exe = svc.exec_cache.get(ctx, item.kind, item.aux, padded,
-                                     make_fn, svc.dispatcher)
-            instr = ctx.instrumented and item.kind == "read"
-            args = (np.int32(keys.size),) if instr else ()
-            out = exe(q, *args, *ctx.bind)   # async dispatch: no block
+            if routed:
+                routes = svc.dispatcher.routes_for(group, ctx.topology)
+                out = svc.dispatcher.launch(
+                    ctx, item.kind, item.aux, keys, routes=routes,
+                    exec_cache=svc.exec_cache)   # launches, never blocks
+                padded = out.padded
+            else:
+                make_fn = ((lambda: ctx.read_fn) if item.kind == "read"
+                           else (lambda: ctx.scan_fn(item.aux)))
+                q, padded = svc.dispatcher.pad_and_place(keys)
+                exe = svc.exec_cache.get(ctx, item.kind, item.aux, padded,
+                                         make_fn, svc.dispatcher)
+                instr = ctx.instrumented and item.kind == "read"
+                args = (np.int32(keys.size),) if instr else ()
+                out = exe(q, *args, *ctx.bind)   # async dispatch: no block
         except BaseException as e:       # noqa: BLE001 — fail the group only
             self._put(_Slot(group=group, kind=item.kind, error=e,
                             t_submit_oldest=t_oldest, t_launch=t0))
@@ -410,8 +431,10 @@ class AsyncExecutor:
                     rid_first=group[0].rid, rid_last=group[-1].rid)
         self._put(_Slot(group=group, kind=item.kind, out=out, m=keys.size,
                         padded=padded, t_submit_oldest=t_oldest,
-                        t_launch=t0, version=ctx.key[0],
-                        instrumented=instr))
+                        t_launch=t0,
+                        version=ctx.version if routed else ctx.key[0],
+                        instrumented=False if routed else instr,
+                        routed=routed))
 
     def _put(self, slot: _Slot) -> None:
         with self._inflight_cv:
@@ -443,14 +466,26 @@ class AsyncExecutor:
             else:
                 t_wait = time.perf_counter()
                 try:
-                    out = svc.dispatcher.finalize(
-                        slot.out, slot.m, instrumented=slot.instrumented)
+                    if slot.routed:
+                        out, route_stats, _ = slot.out.finalize()
+                    else:
+                        out = svc.dispatcher.finalize(
+                            slot.out, slot.m,
+                            instrumented=slot.instrumented)
                 except BaseException as e:   # noqa: BLE001 — device failure
                     for r in slot.group:     # fails the slot, not the loop
                         r.future._set_exception(e)
                     return
                 t_end = time.perf_counter()
-                if slot.instrumented:
+                if slot.routed:
+                    # per-shard stats land in each SHARD generation's
+                    # health record; route skew feeds the metrics
+                    for ver, stats in route_stats:
+                        svc._note_health(ver, stats, t_end)
+                    if svc.metrics is not None:
+                        svc.metrics.observe_route(slot.out.counts,
+                                                  slot.out.padded)
+                elif slot.instrumented:
                     # instrumented read: route the device-reduced stats
                     # to the record of the generation the slot ran on
                     out, stats = out

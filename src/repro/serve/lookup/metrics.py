@@ -68,6 +68,52 @@ class ServiceMetrics:
         self.n_compaction_failures = 0
         self.delta_keys = 0
         self.delta_threshold = 0
+        # -- routed topology (DESIGN.md §16; zero for broadcast) ---------
+        self.n_routed_batches = 0
+        self.sum_route_skew = 0.0      # per-batch max/mean shard load
+        self.max_route_skew = 0.0
+        self._shard_stats: Dict[int, Dict[str, float]] = {}
+
+    def observe_route(self, counts, padded: int) -> None:
+        """One completed routed batch: per-shard key counts (including
+        zeros for untouched shards) and the summed padded width.  Skew
+        is max/mean over ALL shards — 1.0 is a perfectly balanced batch,
+        n_shards is everything-in-one-shard."""
+        counts = [int(c) for c in counts]
+        total = sum(counts)
+        n_shards = len(counts)
+        mean = total / n_shards if n_shards else 0.0
+        skew = (max(counts) / mean) if mean > 0 else 0.0
+        with self._lock:
+            self.n_routed_batches += 1
+            self.sum_route_skew += skew
+            if skew > self.max_route_skew:
+                self.max_route_skew = skew
+            for s, c in enumerate(counts):
+                st = self._shard_stats.setdefault(
+                    s, {"keys": 0, "batches": 0, "sum_occupancy": 0.0})
+                if c:
+                    st["keys"] += c
+                    st["batches"] += 1
+                    # per-shard occupancy vs an even split of the padded
+                    # width: how full this shard's sub-batch ran
+                    st["sum_occupancy"] += c / max(padded / n_shards, 1)
+
+    def per_shard(self) -> list:
+        """Per-shard load rows for the exporters (`/metrics.json` and
+        the ``shard``-labelled Prometheus families)."""
+        with self._lock:
+            rows = []
+            for s in sorted(self._shard_stats):
+                st = self._shard_stats[s]
+                rows.append({
+                    "shard": s,
+                    "keys": st["keys"],
+                    "batches": st["batches"],
+                    "mean_occupancy": (st["sum_occupancy"] / st["batches"]
+                                       if st["batches"] else 0.0),
+                })
+            return rows
 
     def observe_batch(self, *, n_keys: int, padded: int, n_requests: int,
                       t_oldest_submit: float, t_start: float,
@@ -206,4 +252,9 @@ class ServiceMetrics:
                 "delta_keys": self.delta_keys,
                 "delta_occupancy": (self.delta_keys / self.delta_threshold
                                     if self.delta_threshold else 0.0),
+                "routed_batches": self.n_routed_batches,
+                "route_skew": (self.sum_route_skew / self.n_routed_batches
+                               if self.n_routed_batches else 0.0),
+                "route_max_skew": self.max_route_skew,
+                "route_shards": len(self._shard_stats),
             }

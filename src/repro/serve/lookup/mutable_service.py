@@ -64,6 +64,13 @@ class MutableLookupService(LookupService):
         self._compact_fail_t: Optional[float] = None
         self.last_compaction_error: Optional[BaseException] = None
         cfg = config if config is not None else MutableLookupServiceConfig()
+        if cfg.topology is not None or cfg.shards > 1:
+            # the merged (base + delta) view is a single global rank
+            # space; range-routing it needs per-shard delta partitioning
+            # (ROADMAP open item 3's tiered layer is the natural home)
+            raise ValueError(
+                "MutableLookupService does not support a routed topology"
+                " yet — serve writes through a broadcast service")
         super().__init__(keys, config=cfg, mesh=mesh, counter=counter)
 
     # -- index lifecycle -------------------------------------------------

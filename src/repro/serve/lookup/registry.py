@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +32,7 @@ from repro.core.plan import LookupPlan
 from repro.obs.trace import maybe_span
 from repro.serve.common import MonotonicCounter
 from repro.serve.lookup.dispatch import make_plan
+from repro.serve.lookup.topology import ShardTopology
 
 DEFAULT_NAME = "default"
 
@@ -53,22 +54,114 @@ class Generation:
     #: `spec.backend`/`spec.last_mile` always reflect what the
     #: generation actually serves with.
     spec: Optional[spec_mod.IndexSpec] = None
+    #: Shard index inside a RoutedGeneration (None for broadcast
+    #: generations) — threaded into per-shard health records.
+    shard: Optional[int] = None
 
     def scan_fn(self, m: int) -> Callable:
         """Plan-compiled scan (positions + m-record window), cached on
         the plan per (m, backend) — op kind "scan" dispatches here."""
         return self.plan.compile_scan(m, backend=self.backend)
 
-    def instrumented_fn(self) -> Callable:
+    def fn_for(self, donate: bool = False) -> Callable:
+        """Plan-compiled lookup, optionally donating the query buffer
+        (safe on the dispatcher's staged placements; no-op on CPU)."""
+        return self.plan.compile(backend=self.backend, donate=donate)
+
+    def instrumented_fn(self, donate: bool = False) -> Callable:
         """Plan-compiled instrumented lookup ``(q, n_valid) -> (LB,
         health stats)`` — same positions as ``fn`` bit-for-bit, plus the
         device-reduced stats the health monitor folds in."""
-        return self.plan.compile_instrumented(backend=self.backend)
+        return self.plan.compile_instrumented(backend=self.backend,
+                                              donate=donate)
 
     def instrumented_merged_fn(self) -> Callable:
         """Instrumented merged-view lookup ``(q, n_valid, delta) ->
         (merged LB, base-plan health stats)`` for the mutable service."""
         return self.plan.compile_instrumented_merged(backend=self.backend)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RoutedGeneration:
+    """One published *set* of per-shard generations plus the topology
+    that routes into them (DESIGN.md §16).
+
+    Swaps atomically as a unit: the registry pointer flips to the whole
+    RoutedGeneration, so a pinned batch observes one consistent
+    (topology, shard builds) pair even while a re-publish is in flight.
+    Shard ``s`` serves keys in ``(split[s-1], split[s]]`` with its own
+    (smaller, per-slice tuned) plan; the routed global rank is
+    ``topology.offsets[s] + LB_local``.
+    """
+
+    version: int
+    topology: ShardTopology
+    shards: Tuple[Generation, ...]
+    spec: Optional[spec_mod.IndexSpec] = None
+    backend: str = "jnp"
+    _scan_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def n_keys(self) -> int:
+        return self.topology.n_keys
+
+    @property
+    def shard_versions(self) -> Tuple[int, ...]:
+        return tuple(s.version for s in self.shards)
+
+    @property
+    def plan(self) -> LookupPlan:
+        """First shard's plan — shape/name probe only; never dispatch
+        through it directly (it covers one key range)."""
+        return self.shards[0].plan
+
+    @property
+    def point_only(self) -> bool:
+        return any(s.plan.point_only for s in self.shards)
+
+    @property
+    def max_err(self) -> int:
+        return max(s.plan.bounds.max_err for s in self.shards)
+
+    @property
+    def max_scan_len(self) -> int:
+        """Largest exact routed scan width: a shard-s window is repaired
+        with the first ``m`` records of shard s+1, which only covers the
+        spill when every shard holds at least ``m`` keys."""
+        return self.topology.min_shard_len
+
+    def shard_scan_fn(self, s: int, m: int) -> Callable:
+        """Scan for shard ``s``: the shard-local window merged with the
+        head of shard ``s+1``.  All shard-s records sort strictly below
+        all shard-(s+1) records (boundaries are snapped to duplicate
+        runs), so the first ``m`` of the sorted union is exactly the
+        global window — the same argument as the delta merged scan."""
+        key = (int(s), int(m))
+        fn = self._scan_cache.get(key)
+        if fn is not None:
+            return fn
+        gen = self.shards[s]
+        if s == len(self.shards) - 1:
+            fn = gen.scan_fn(m)          # sentinel padding is global here
+        else:
+            import jax
+            from repro.core.plan import _window_gather
+
+            run = gen.plan.lb_expr(backend=gen.backend)
+            data = gen.plan.data
+            head = self.shards[s + 1].data[:m]
+
+            def scan(q):
+                pos = run(q)
+                wb = _window_gather(data, pos, m)
+                spill = jnp.broadcast_to(head[None, :], (q.shape[0], m))
+                merged = jnp.sort(
+                    jnp.concatenate([wb, spill], axis=1), axis=1)[:, :m]
+                return pos, merged
+
+            fn = jax.jit(scan)
+        self._scan_cache[key] = fn
+        return fn
 
 
 class IndexRegistry:
@@ -115,23 +208,8 @@ class IndexRegistry:
         generation, and swap it in.  ``spec`` defaults to the spec the
         build carries (`spec.build` stamps it into ``meta``) and is
         re-aligned to the backend/last-mile the generation serves with."""
-        plan = make_plan(build, data, last_mile=last_mile)
-        if spec is None:
-            spec = build.meta.get("spec")
-        if spec is not None:
-            spec = spec.replace(backend=backend,
-                                last_mile=last_mile if last_mile is not None
-                                else spec.last_mile)
-        gen = Generation(
-            version=self._versions.next(),
-            build=build,
-            data=data,
-            plan=plan,
-            fn=plan.compile(backend=backend),
-            n_keys=int(data.shape[0]),
-            backend=backend,
-            spec=spec,
-        )
+        gen = self.make_generation(build, data, last_mile=last_mile,
+                                   backend=backend, spec=spec)
         with self._lock:
             self._current[name] = gen
             subscribers = list(self._subscribers)
@@ -144,6 +222,101 @@ class IndexRegistry:
         for cb in subscribers:
             cb(name, gen)
         return gen
+
+    def make_generation(self, build: base.IndexBuild, data,
+                        last_mile: Optional[str] = None,
+                        backend: str = "jnp",
+                        spec: Optional[spec_mod.IndexSpec] = None,
+                        shard: Optional[int] = None) -> Generation:
+        """Lower a build to a versioned Generation WITHOUT publishing it
+        — the routed publish path assembles several of these and swaps
+        them in as one unit."""
+        plan = make_plan(build, data, last_mile=last_mile)
+        if spec is None:
+            spec = build.meta.get("spec")
+        if spec is not None:
+            spec = spec.replace(backend=backend,
+                                last_mile=last_mile if last_mile is not None
+                                else spec.last_mile)
+        return Generation(
+            version=self._versions.next(),
+            build=build,
+            data=data,
+            plan=plan,
+            fn=plan.compile(backend=backend),
+            n_keys=int(data.shape[0]),
+            backend=backend,
+            spec=spec,
+            shard=shard,
+        )
+
+    def publish_routed(self, shard_gens, topology: ShardTopology,
+                       name: str = DEFAULT_NAME,
+                       spec: Optional[spec_mod.IndexSpec] = None,
+                       backend: str = "jnp") -> RoutedGeneration:
+        """Swap a complete shard set in as one RoutedGeneration."""
+        rgen = RoutedGeneration(
+            version=self._versions.next(),
+            topology=topology,
+            shards=tuple(shard_gens),
+            spec=spec,
+            backend=backend,
+        )
+        with self._lock:
+            self._current[name] = rgen
+            subscribers = list(self._subscribers)
+        if self.health is not None:
+            self.health.on_publish_group(rgen.shards)
+        if self.recorder is not None:
+            self.recorder.instant(
+                "publish", cat="lifecycle", reg_name=name,
+                version=rgen.version, index=rgen.plan.name,
+                n_keys=rgen.n_keys, n_shards=topology.n_shards)
+        for cb in subscribers:
+            cb(name, rgen)
+        return rgen
+
+    def build_and_publish_routed(self, index, keys: np.ndarray,
+                                 topology: ShardTopology,
+                                 hyper: Optional[Dict[str, Any]] = None,
+                                 name: str = DEFAULT_NAME,
+                                 last_mile: Optional[str] = None,
+                                 backend: Optional[str] = None,
+                                 tuner: Optional[spec_mod.Tuner] = None
+                                 ) -> RoutedGeneration:
+        """Build one generation per topology range and swap the set in.
+
+        With a ``tuner``, each shard's spec is searched against ONLY its
+        slice (per-shard byte budget = total / shards); without one,
+        every shard reuses the coerced spec — smaller slices still give
+        tighter error bounds for the same hyperparameters.
+        """
+        sp = spec_mod.coerce(index, hyper, backend=backend,
+                             last_mile=last_mile)
+        keys = np.asarray(keys, dtype=np.uint64)
+        offs = topology.offsets
+        shard_specs = [sp] * topology.n_shards
+        builds = [None] * topology.n_shards
+        if tuner is not None:
+            results = tuner.tune_shards(keys, offs)
+            shard_specs = [r.spec for r in results]
+            builds = [r.build for r in results]
+        gens = []
+        with maybe_span(self.recorder, "index_build", cat="lifecycle",
+                        reg_name=name, index=sp.index,
+                        n_keys=int(keys.size),
+                        n_shards=topology.n_shards):
+            for s in range(topology.n_shards):
+                sl = keys[offs[s]:offs[s + 1]]
+                b = builds[s] if builds[s] is not None \
+                    else spec_mod.build(shard_specs[s], sl)
+                gens.append(self.make_generation(
+                    b, jnp.asarray(sl),
+                    last_mile=shard_specs[s].last_mile,
+                    backend=shard_specs[s].backend,
+                    spec=shard_specs[s], shard=s))
+        return self.publish_routed(gens, topology, name=name, spec=sp,
+                                   backend=sp.backend)
 
     def build_and_publish(self, index, keys: np.ndarray,
                           hyper: Optional[Dict[str, Any]] = None,

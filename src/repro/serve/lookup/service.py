@@ -41,11 +41,14 @@ from repro.obs.health import HealthMonitor
 from repro.obs.trace import SpanRecorder, maybe_span
 from repro.serve.common import MonotonicCounter
 from repro.serve.lookup.admission import LookupFuture, MicroBatcher
-from repro.serve.lookup.dispatch import PAD_QUANTUM, ShardedDispatcher
+from repro.serve.lookup.dispatch import (PAD_QUANTUM, RoutedContext,
+                                         RoutedDispatcher, ShardedDispatcher)
 from repro.serve.lookup.executor import (AsyncContext, AsyncExecutor,
                                          ExecutableCache, WorkItem)
 from repro.serve.lookup.metrics import ServiceMetrics
-from repro.serve.lookup.registry import DEFAULT_NAME, Generation, IndexRegistry
+from repro.serve.lookup.registry import (DEFAULT_NAME, Generation,
+                                         IndexRegistry, RoutedGeneration)
+from repro.serve.lookup.topology import ShardTopology
 
 
 #: One source of truth for the serving-default hyperparameters — the
@@ -116,6 +119,24 @@ class LookupServiceConfig:
     #: Alert rules evaluated over `health_snapshot()` keys; None -> the
     #: shipped `repro.obs.alerts.default_rules()`, () -> no rules.
     alert_rules: Optional[Tuple[AlertRule, ...]] = None
+    #: Range-routed serving topology (DESIGN.md §16).  ``shards > 1``
+    #: partitions the key space into that many equal-count ranges, each
+    #: with its own (smaller) index generation, and replaces broadcast
+    #: dispatch with scatter/gather routing — per-device work drops from
+    #: O(batch) to O(batch/shards).  ``topology`` pins an explicit
+    #: `ShardTopology` instead (wins over ``shards``/``replicas``, and
+    #: forces the routed path even with one shard).
+    shards: int = 1
+    replicas: int = 1                       # read fan-out per shard
+    topology: Optional[ShardTopology] = None
+    #: Per-shard spec search: each shard's `IndexSpec` tuned against
+    #: ONLY its slice (per-shard byte budget = Tuner.max_bytes / shards).
+    #: None -> every shard reuses the service's resolved spec.
+    shard_tuner: Optional[spec_mod.Tuner] = None
+    #: Donate the staged query buffer to XLA (the executable reuses its
+    #: memory).  None -> auto: on for non-CPU backends, off on CPU where
+    #: donation is a no-op with a warning.
+    donate_queries: Optional[bool] = None
 
     def resolved_spec(self) -> spec_mod.IndexSpec:
         """The validated `IndexSpec` every build of this service uses."""
@@ -144,8 +165,12 @@ class LookupService:
         #: §15 per-generation health monitor, or None when disabled —
         #: attached to the registry BEFORE the first publish so the
         #: initial generation gets a record too
+        shards_hint = (self.cfg.topology.n_shards
+                       if self.cfg.topology is not None
+                       else max(1, self.cfg.shards))
         self.health = (HealthMonitor(slot_s=self.cfg.window_slot_s,
-                                     n_slots=self.cfg.window_slots)
+                                     n_slots=self.cfg.window_slots,
+                                     keep=max(8, 2 * (shards_hint + 1)))
                        if self.cfg.health else None)
         self.registry.health = self.health
         #: §15 alert engine — always present (rules may be empty); it
@@ -174,20 +199,49 @@ class LookupService:
                                           recorder=self.recorder)
         self._async = (AsyncExecutor(self, slots=self.cfg.slots)
                        if self.cfg.executor == "async" else None)
-        if self._async is not None:
-            # invalidation-on-swap rides the publish event itself, so
-            # compaction rebuilds (which publish without going through
-            # swap_keys) evict stale executables too
-            self.registry.subscribe(self._on_publish)
+        # routed state: the current RoutedGeneration (None on the
+        # broadcast path) and the pinned-context cache keyed on
+        # (generation version, lane epoch, instrumented)
+        self._routed: Optional[RoutedGeneration] = None
+        self._rctx_cache: Dict[Tuple, RoutedContext] = {}
+        import jax
+        self._donate = (self.cfg.donate_queries
+                        if self.cfg.donate_queries is not None
+                        else jax.default_backend() != "cpu")
+        # every publish lands here: routed topology/router updates for
+        # both executors, plus (async only) invalidation-on-swap — so
+        # compaction rebuilds (which publish without going through
+        # swap_keys) evict stale executables too
+        self.registry.subscribe(self._on_publish)
         self.swap_keys(keys)
 
     # -- index lifecycle -------------------------------------------------
+    def _resolve_topology(self, keys) -> Optional[ShardTopology]:
+        """The serving topology for one key set, or None for broadcast.
+        An explicit ``cfg.topology`` always routes (even single-shard —
+        that is the degeneration-parity path); ``shards > 1`` builds an
+        equal-count partition fresh per key set."""
+        if self.cfg.topology is not None:
+            return self.cfg.topology
+        if self.cfg.shards > 1:
+            return ShardTopology.from_keys(keys, self.cfg.shards,
+                                           self.cfg.replicas)
+        return None
+
     def swap_keys(self, keys: np.ndarray) -> Generation:
         """Rebuild on a fresh key set and hot-swap it in (no draining).
         Builds go through the config's resolved `IndexSpec`, so the
-        published generation is spec-addressable (`Generation.spec`)."""
-        return self.registry.build_and_publish(
-            self.cfg.resolved_spec(), keys)
+        published generation is spec-addressable (`Generation.spec`).
+        With a routed topology this publishes one generation per range
+        plus the topology, as a single atomic `RoutedGeneration`."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        topo = self._resolve_topology(keys)
+        if topo is None:
+            return self.registry.build_and_publish(
+                self.cfg.resolved_spec(), keys)
+        return self.registry.build_and_publish_routed(
+            self.cfg.resolved_spec(), keys, topo,
+            tuner=self.cfg.shard_tuner)
 
     @property
     def generation(self) -> Generation:
@@ -212,17 +266,23 @@ class LookupService:
         traces execute end-to-end instead of position-only."""
         # bound the client-supplied length: the window is a [B, length]
         # gather AND a compile-shape axis (each distinct length caches a
-        # compiled executable), so it must not be client-unbounded
-        if not 1 <= length <= self.cfg.max_scan_length:
-            raise ValueError(
-                f"scan length must be in [1, {self.cfg.max_scan_length}]")
+        # compiled executable), so it must not be client-unbounded.  A
+        # routed topology tightens the bound to the smallest shard — a
+        # shard's spill window only repairs up to min_shard_len records.
+        gen = self.generation
+        max_len = self.cfg.max_scan_length
+        if isinstance(gen, RoutedGeneration):
+            max_len = min(max_len, gen.max_scan_len)
+        if not 1 <= length <= max_len:
+            raise ValueError(f"scan length must be in [1, {max_len}]")
         # reject point-only indexes at admission (cheapest point); the
         # per-group guard in _complete_run still covers the race where a
         # hot-swap to a point-only index lands after admission
-        if self.generation.plan.point_only:
+        point_only = (gen.point_only if isinstance(gen, RoutedGeneration)
+                      else gen.plan.point_only)
+        if point_only:
             raise ValueError(
-                f"index {self.generation.plan.name!r} is point-only: "
-                "no scans")
+                f"index {gen.plan.name!r} is point-only: no scans")
         _, fut = self.batcher.submit(keys, kind="scan", aux=int(length),
                                      client=client)
         return fut
@@ -274,8 +334,17 @@ class LookupService:
 
     def _dispatch_run(self, kind: str, run, ctx=None) -> None:
         """Route one same-kind run; subclasses add kinds (inserts)."""
-        lookup_fn, scan_for, version = (ctx if ctx is not None
-                                        else self._pin_context())
+        if ctx is None:
+            ctx = self._pin_context()
+        if isinstance(ctx, RoutedContext):
+            if kind == "scan":
+                for group in self._runs(run, key=lambda r: r.aux):
+                    self._complete_routed("scan", list(group),
+                                          int(group[0].aux), ctx)
+            else:
+                self._complete_routed("read", list(run), 0, ctx)
+            return
+        lookup_fn, scan_for, version = ctx
         if kind == "scan":
             self._dispatch_scans(run, scan_for)
         else:
@@ -286,11 +355,73 @@ class LookupService:
         immutable generation — the snapshot a batch completes against.
         With health on, ``lookup_fn`` is the plan's INSTRUMENTED
         executable (same positions bit-for-bit, plus device-reduced
-        stats); ``version`` routes those stats to the right record."""
+        stats); ``version`` routes those stats to the right record.
+        Routed generations pin a `RoutedContext` instead (the whole
+        topology + per-lane executables snapshot)."""
         gen = self.registry.current()
+        if isinstance(gen, RoutedGeneration):
+            return self._routed_context(gen)
         if self.health is not None:
             return gen.instrumented_fn(), gen.scan_fn, gen.version
         return gen.fn, gen.scan_fn, gen.version
+
+    def _routed_context(self, gen: RoutedGeneration) -> RoutedContext:
+        """One executable-cache-addressable context per (generation,
+        lane layout): every (shard, replica) lane gets its own
+        `AsyncContext` keyed ``(shard version, replica)`` so AOT
+        executables stay committed to their lane's device."""
+        instrumented = self.health is not None
+        key = (gen.version, self.dispatcher.lanes_epoch, instrumented)
+        rctx = self._rctx_cache.get(key)
+        if rctx is not None:
+            return rctx
+        lane_ctxs = []
+        for s, sgen in enumerate(gen.shards):
+            reps = []
+            read_fn = (sgen.instrumented_fn(donate=self._donate)
+                       if instrumented else sgen.fn_for(self._donate))
+            scan_fn = (lambda m, s=s, g=gen: g.shard_scan_fn(s, int(m)))
+            for r in range(len(self.dispatcher.lanes[s])):
+                reps.append(AsyncContext(
+                    key=(sgen.version, r),
+                    read_fn=read_fn,
+                    scan_fn=scan_fn,
+                    bind=(),
+                    sample_key=int(np.asarray(sgen.data[:1])[0]),
+                    instrumented=instrumented))
+            lane_ctxs.append(tuple(reps))
+        rctx = RoutedContext(
+            topology=gen.topology,
+            lane_ctxs=tuple(lane_ctxs),
+            offsets=tuple(gen.topology.offsets),
+            versions=gen.shard_versions,
+            version=gen.version,
+            instrumented=instrumented)
+        self._rctx_cache[key] = rctx
+        return rctx
+
+    def _complete_routed(self, kind: str, group, aux: int,
+                         rctx: RoutedContext) -> None:
+        """Synchronous routed dispatch of one same-(kind, aux) group:
+        scatter over shard lanes, finalize (gather in admission order),
+        complete futures — the routed twin of `_complete_run`."""
+        keys = (group[0].keys if len(group) == 1
+                else np.concatenate([r.keys for r in group]))
+        t0 = time.perf_counter()
+        try:
+            routes = self.dispatcher.routes_for(group, rctx.topology)
+            handle = self.dispatcher.launch(rctx, kind, aux, keys,
+                                            routes=routes)
+            out, stats, padded = handle.finalize()
+        except BaseException as e:  # noqa: BLE001 — fail the group only
+            for r in group:
+                r.future._set_exception(e)
+            return
+        t1 = time.perf_counter()
+        for ver, st in stats:
+            self._note_health(ver, st, t1)
+        self.metrics.observe_route(handle.counts, padded)
+        self._finish_group(group, out, t0, t1, keys.size, padded)
 
     def _complete_run(self, group, make_fn, version: int = -1,
                       instrumented: bool = False) -> None:
@@ -315,6 +446,14 @@ class LookupService:
         if instrumented:
             out, stats = out
             self._note_health(version, stats, t1)
+        self._finish_group(group, out, t0, t1, keys.size,
+                           self.dispatcher.padded_size(keys.size))
+
+    def _finish_group(self, group, out, t0: float, t1: float,
+                      n_keys: int, padded: int) -> None:
+        """Shared completion tail of both sync paths: slice the batch
+        result per request in admission order, resolve futures, record
+        request spans, and fold the batch into the metrics."""
         off = 0
         for r in group:
             end = off + r.keys.size
@@ -328,8 +467,8 @@ class LookupService:
                                       t_submit=r.t_submit,
                                       t_launch=t0, t_end=t1)
         self.metrics.observe_batch(
-            n_keys=keys.size,
-            padded=self.dispatcher.padded_size(keys.size),
+            n_keys=n_keys,
+            padded=padded,
             n_requests=len(group),
             t_oldest_submit=group[0].t_submit,
             t_start=t0, t_end=t1,
@@ -352,8 +491,12 @@ class LookupService:
     def _async_context(self) -> AsyncContext:
         """Pin one generation as an executable-cache-addressable context:
         the async analogue of `_pin_context` (same snapshot semantics —
-        a hot-swap lands between batches, never inside one)."""
+        a hot-swap lands between batches, never inside one).  Routed
+        generations return the (cached) `RoutedContext` — the executor
+        branches on the type."""
         gen = self.registry.current()
+        if isinstance(gen, RoutedGeneration):
+            return self._routed_context(gen)
         instrumented = self.health is not None
         return AsyncContext(
             key=(gen.version,),
@@ -386,17 +529,18 @@ class LookupService:
         raise NotImplementedError(
             "insert completion on a read-only service")
 
-    def _resolved_warm_buckets(self):
+    def _resolved_warm_buckets(self, dispatcher=None):
+        d = self.dispatcher if dispatcher is None else dispatcher
         if self.cfg.warm_buckets:
-            return tuple(sorted({self.dispatcher.padded_size(int(b))
+            return tuple(sorted({d.padded_size(int(b))
                                  for b in self.cfg.warm_buckets}))
         # every pow2 bucket steady traffic can dispatch at: quantum ..
         # padded(max_batch) — log2-many executables, compiled once
-        buckets, b = [], self.dispatcher.padded_size(1)
-        top = self.dispatcher.padded_size(self.cfg.max_batch)
+        buckets, b = [], d.padded_size(1)
+        top = d.padded_size(self.cfg.max_batch)
         while b < top:
             buckets.append(b)
-            b = self.dispatcher.padded_size(b + 1)
+            b = d.padded_size(b + 1)
         buckets.append(top)
         return tuple(buckets)
 
@@ -408,6 +552,8 @@ class LookupService:
         if self._async is None:
             return 0
         ctx = self._async_context()
+        if isinstance(ctx, RoutedContext):
+            return self._warm_routed(ctx)
         buckets = self._resolved_warm_buckets()
         with maybe_span(self.recorder, "warmup", cat="lifecycle",
                         version=ctx.key[0], n_buckets=len(buckets)):
@@ -415,14 +561,52 @@ class LookupService:
                 ctx, buckets, self.dispatcher,
                 scan_lengths=self.cfg.warm_scan_lengths)
 
-    def _on_publish(self, name: str, gen: Generation) -> None:
-        """Registry publish hook (async executor only): evict stale
-        generations' executables and re-warm the new one WITHOUT
-        blocking the publisher (a compaction thread may be mid-swap
-        holding its own locks — warming there would deadlock)."""
+    def _warm_routed(self, rctx: RoutedContext) -> int:
+        """Prime every (shard, replica) lane's executables on that
+        lane's own dispatcher — AOT executables are device-committed,
+        so each lane needs its own warm pass."""
+        n = 0
+        with maybe_span(self.recorder, "warmup", cat="lifecycle",
+                        version=rctx.version,
+                        n_shards=self.dispatcher.n_shards):
+            for s, grp in enumerate(self.dispatcher.lanes):
+                for r, lane in enumerate(grp):
+                    n += self.exec_cache.warmup(
+                        rctx.lane_ctxs[s][r],
+                        self._resolved_warm_buckets(lane), lane,
+                        scan_lengths=self.cfg.warm_scan_lengths)
+        return n
+
+    def _on_publish(self, name: str, gen) -> None:
+        """Registry publish hook: track the routed topology (both
+        executors route at admission through it), then — async only —
+        evict stale generations' executables and re-warm the new one
+        WITHOUT blocking the publisher (a compaction thread may be
+        mid-swap holding its own locks — warming there would deadlock)."""
         if name != DEFAULT_NAME:
             return
-        self.exec_cache.invalidate(keep_version=gen.version)
+        if isinstance(gen, RoutedGeneration):
+            if not isinstance(self.dispatcher, RoutedDispatcher):
+                self.dispatcher = RoutedDispatcher(
+                    gen.topology, pad_quantum=self.cfg.pad_quantum,
+                    recorder=self.recorder)
+            else:
+                self.dispatcher.set_replicas(gen.topology)
+            self._routed = gen
+            self._rctx_cache.clear()
+            # admission-time routing: each submit tags its request with
+            # (topology, shard ids); a later hot-swap invalidates the
+            # tag by object identity and dispatch re-routes
+            self.batcher.router = (
+                lambda keys, t=gen.topology: (t, t.route(keys)))
+            keep = (gen.version,) + gen.shard_versions
+        else:
+            self._routed = None
+            self.batcher.router = None
+            keep = gen.version
+        if self._async is None:
+            return
+        self.exec_cache.invalidate(keep_version=keep)
         if self._thread is None:
             # not serving: start() warms synchronously before the first
             # dispatch, and a never-started service must not leave a
@@ -432,6 +616,30 @@ class LookupService:
                              name="lookup-warmer", daemon=True)
         self._warm_thread = t
         t.start()
+
+    def rebalance_replicas(self, total_replicas: Optional[int] = None,
+                           window_s: float = 10.0) -> Tuple[int, ...]:
+        """Re-apportion replica seats to the shards that actually take
+        the traffic (the PR 8 per-shard traffic windows): the hottest
+        range gets the replicas.  Only the read fan-out changes — split
+        points and offsets stay, so admission-time routes remain valid.
+        Returns the new per-shard replica counts."""
+        gen = self.registry.current()
+        if not isinstance(gen, RoutedGeneration):
+            raise ValueError("rebalance_replicas needs a routed topology")
+        masses = []
+        for sgen in gen.shards:
+            mass = 0.0
+            if self.health is not None:
+                rec = self.health.get(sgen.version)
+                if rec is not None:
+                    mass = float(np.sum(rec.traffic_window(window_s)))
+            masses.append(mass)
+        topo = gen.topology.rebalanced_from_masses(
+            masses, total_replicas=total_replicas)
+        if self.dispatcher.set_replicas(topo):
+            self._rctx_cache.clear()
+        return topo.replicas
 
     def _warm_retry(self) -> None:
         """Warm the current context, tolerating construction windows

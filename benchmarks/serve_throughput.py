@@ -709,6 +709,191 @@ def routed_smoke(backend=None, check_baseline: bool = False,
           f"device(s)", flush=True)
 
 
+RETUNE_SMOKE_METRICS_PATH = \
+    "benchmarks/results/serve_smoke_retune_metrics.json"
+
+
+def retune_smoke(backend=None, store_dir=None) -> None:
+    """Self-driving-tuning CI tripwire (DESIGN.md §17): a deliberately
+    MIS-TUNED incumbent under drift-injected hot-spot traffic, A/B'd
+    against a no-retune arm.  Exit NONZERO when (a) the shadow retuner
+    never reaches a verified hot-swap through the real alert path
+    (workload_drift firing -> hysteresis -> tune -> verify -> swap),
+    (b) any position bit diverges from the sorted-array oracle at ANY
+    point in either arm — before, across, or after the swap, (c) the
+    retuned arm's post-swap windowed request p99 is not below the
+    no-retune arm's over the same measurement phase, or (d) a second
+    service lifetime on the SAME artifact store re-runs the ladder
+    sweep instead of hot-swapping straight from the cached spec."""
+    import tempfile
+
+    from repro.autotune import AutotuneConfig
+    from repro.core.spec import IndexSpec, Tuner
+    from repro.serve.lookup import LookupService, LookupServiceConfig
+
+    backend = backend or C.BACKEND
+    keys = C.dataset("amzn")
+    # mis-tuned on purpose, on BOTH §17 axes: a full-sample btree
+    # (stores every key, ~3.2MB — busts the 512KB serving budget below)
+    # with fanout 2048, whose two-level descent scans ~4100 node keys
+    # per lookup where the ladder's fanout-128 rungs scan ~390 — the
+    # spec a stale tuning run (or a careless operator) strands a
+    # budget-constrained service on.  The retuner must land a verified
+    # swap onto a budgeted ladder rung that serves ~10x fewer node
+    # bytes per lookup.
+    mis = IndexSpec("btree", {"sample": 1, "fanout": 2048},
+                    backend=backend).validated()
+    rng = np.random.default_rng(0)
+    # full-batch requests at a saturating rate: the A/B p99 must be
+    # decided by per-batch DEVICE compute (where window width bites),
+    # not by deadline waits or host admission overhead
+    hot = rng.choice(keys[:max(1, len(keys) // 64)],
+                     size=max(N_SERVE_Q, 65536)).astype(np.uint64)
+    chunks = [hot[i:i + 16384] for i in range(0, len(hot), 16384)]
+    wants = [np.searchsorted(keys, c, side="left").astype(np.int64)
+             for c in chunks]
+    store_dir = store_dir or tempfile.mkdtemp(prefix="retune_smoke_")
+
+    def _mk(at_cfg):
+        return LookupService(keys, LookupServiceConfig(
+            spec=mis, max_batch=16384, deadline_ms=0.5, executor="async",
+            autotune=at_cfg))
+
+    div = {"rt": 0, "base": 0, "rt2": 0}
+
+    def _wave(svc, tag):
+        futs = [svc.submit(c) for c in chunks]
+        for f, want in zip(futs, wants):
+            got = np.asarray(f.result(timeout=120.0), dtype=np.int64)
+            div[tag] += int(np.count_nonzero(got != want))
+
+    def _drive(svc, tag):
+        """Drift phase -> poll-to-swap (when a retuner is attached) ->
+        settle.  Returns the last retuner decision (None on the
+        no-retune arm)."""
+        decision = None
+        for _ in range(2):              # drift phase: fill the window
+            _wave(svc, tag)
+        if svc.autotune is not None:
+            deadline = time.perf_counter() + 60.0
+            while time.perf_counter() < deadline:
+                d = svc.autotune.poll_once()
+                if d is not None:
+                    decision = d
+                if d is not None and d["action"] == "swapped":
+                    break
+                _wave(svc, tag)         # keep the alert window populated
+        else:
+            for _ in range(2):          # keep the arms' phases aligned
+                _wave(svc, tag)
+        svc.warm_wait()                 # let the post-swap re-warm finish
+        for _ in range(2):              # settle: pay any remaining
+            _wave(svc, tag)             # compiles outside the window
+        return decision
+
+    def _phase_p99(svc, tag):
+        t_mark = time.perf_counter()
+        for _ in range(6):
+            _wave(svc, tag)
+        w = svc.metrics.windowed(time.perf_counter() - t_mark + 1e-3)
+        return w["p99_ms"]
+
+    # budgeted search, the paper's tuning contract: the byte cap keeps
+    # the ladder off giant model tables whose gather cost the probe
+    # proxy does not price (it is also part of the artifact-store key)
+    at_cfg = AutotuneConfig(store_dir=store_dir, hysteresis_s=0.0,
+                            cooldown_s=0.0, min_win=0.05,
+                            tuner=Tuner(names=("btree",), max_configs=8,
+                                        backends=(backend,),
+                                        max_bytes=512 * 1024))
+    # both arms live at once, measurement phases INTERLEAVED: each
+    # phase pair samples the same machine conditions, so background
+    # load drifting over the run cancels in the comparison instead of
+    # landing entirely on whichever arm ran second (the idle arm's
+    # executor just blocks on an empty queue).  One phase's p99 is the
+    # max of a handful of bursts — scheduler noise — so the arms are
+    # compared on the median across phases.
+    svc_rt = _mk(at_cfg)
+    svc_base = _mk(None)
+    with svc_rt, svc_base:
+        decision = _drive(svc_rt, "rt")
+        _drive(svc_base, "base")
+        p99s_rt, p99s_base = [], []
+        for _ in range(5):
+            p99s_rt.append(_phase_p99(svc_rt, "rt"))
+            p99s_base.append(_phase_p99(svc_base, "base"))
+    retuner = svc_rt.autotune
+    p99_rt = float(np.median(p99s_rt))
+    p99_base = float(np.median(p99s_base))
+    div_rt, div_base = div["rt"], div["base"]
+
+    if decision is None or decision["action"] != "swapped":
+        raise SystemExit(f"retune smoke: no verified swap happened "
+                         f"(last decision: {decision})")
+    if decision["verify"]["divergent"] != 0:
+        raise SystemExit(f"retune smoke: swap published with divergent "
+                         f"bits: {decision['verify']}")
+    if div_rt or div_base:
+        raise SystemExit(f"retune smoke: served positions diverged from "
+                         f"oracle (retune arm {div_rt}, no-retune arm "
+                         f"{div_base} bits)")
+    print(f"  swap [{decision.get('basis', 'cost')}]: "
+          f"{decision['incumbent']['specs'][0]} "
+          f"(score {decision['incumbent']['score']}) -> "
+          f"{decision['candidate']['specs'][0]} "
+          f"(score {decision['candidate']['score']}), verified on "
+          f"{decision['verify']['n']} replayed queries, 0 divergent",
+          flush=True)
+    print(f"  post-swap windowed p99 (median of 5 interleaved phases): "
+          f"retuned {p99_rt:.2f}ms vs no-retune {p99_base:.2f}ms",
+          flush=True)
+    if p99_rt >= p99_base:
+        raise SystemExit(
+            f"retune smoke: retuned arm's post-swap p99 "
+            f"({p99_rt:.2f}ms) did not beat the no-retune arm "
+            f"({p99_base:.2f}ms)")
+
+    # -- second lifetime on the same store: swap WITHOUT a sweep -------
+    svc2 = _mk(at_cfg)
+    with svc2:
+        decision2 = _drive(svc2, "rt2")
+    retuner2 = svc2.autotune
+    div2 = div["rt2"]
+    if decision2 is None or decision2["action"] != "swapped":
+        raise SystemExit(f"retune smoke: second lifetime did not swap "
+                         f"(last decision: {decision2})")
+    if not decision2.get("cache_hit") or retuner2.n_sweeps != 0:
+        raise SystemExit(
+            f"retune smoke: second lifetime re-ran the ladder sweep "
+            f"(cache_hit={decision2.get('cache_hit')}, "
+            f"sweeps={retuner2.n_sweeps}) — artifact store missed")
+    if div2:
+        raise SystemExit(f"retune smoke: second lifetime diverged from "
+                         f"oracle ({div2} bits)")
+    print(f"  warm restart: swap from cached artifact "
+          f"(cache_hit=True, sweeps=0, "
+          f"store {retuner2.store.stats()})", flush=True)
+
+    metrics = {
+        "cell": {"dataset": "amzn", "incumbent": mis.to_dict(),
+                 "backend": backend, "n_queries": int(len(hot))},
+        "swap": {"candidate": decision["candidate"],
+                 "incumbent_score": decision["incumbent"]["score"],
+                 "basis": decision.get("basis", "cost"),
+                 "verify_n": decision["verify"]["n"]},
+        "p99_ms_retuned": round(p99_rt, 4),
+        "p99_ms_no_retune": round(p99_base, 4),
+        "second_run_cache_hit": True,
+    }
+    os.makedirs(os.path.dirname(RETUNE_SMOKE_METRICS_PATH), exist_ok=True)
+    with open(RETUNE_SMOKE_METRICS_PATH, "w") as f:
+        json.dump(metrics, f, indent=1)
+    print(f"  wrote {RETUNE_SMOKE_METRICS_PATH}", flush=True)
+    print(f"retune smoke ok: drift -> verified hot-swap -> p99 "
+          f"{p99_base:.2f}ms -> {p99_rt:.2f}ms, "
+          f"restart served from the artifact store", flush=True)
+
+
 if __name__ == "__main__":
     _ns = C.bench_args()
     _ap = argparse.ArgumentParser(add_help=False)
@@ -725,9 +910,18 @@ if __name__ == "__main__":
     _ap.add_argument("--check-baseline", action="store_true",
                      help="hold the smoke metrics snapshot against "
                           f"{BASELINE_PATH} (nonzero exit on regression)")
+    _ap.add_argument("--retune-smoke", action="store_true",
+                     help="self-driving-tuning tripwire (DESIGN.md §17): "
+                          "mis-tuned incumbent + drift-injected traffic "
+                          "must reach a verified hot-swap that beats the "
+                          "no-retune arm's p99, bit-exact throughout, "
+                          "and a warm restart must reuse the artifact "
+                          "store instead of re-sweeping")
     _opts = _ap.parse_known_args()[0]
     _ex = _opts.executor
-    if _ns.smoke:
+    if _opts.retune_smoke:
+        retune_smoke(backend=_ns.backend)
+    elif _ns.smoke:
         if _opts.topology == "routed":
             routed_smoke(backend=_ns.backend,
                          check_baseline=_opts.check_baseline)

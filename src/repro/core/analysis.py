@@ -79,10 +79,17 @@ def describe(build: base.IndexBuild, widths: np.ndarray) -> Dict:
 COST_NS_WEIGHTS = {"probes": 30.0, "bytes_touched": 0.25, "flops": 0.5}
 
 
-def cost_ns(metrics: Dict) -> float:
+def cost_ns(metrics: Dict, calibration: float = 1.0) -> float:
     """Scalar per-lookup latency proxy of one `describe()` record — the
-    objective `repro.core.spec.Tuner` minimizes / budgets against."""
-    return float(sum(w * metrics[k] for k, w in COST_NS_WEIGHTS.items()))
+    objective `repro.core.spec.Tuner` minimizes / budgets against.
+
+    ``calibration`` is a measured/proxy ratio (``obs.profiler``'s
+    ``cost_model_ratio``): the proxy trusts its nominal weights only up
+    to a per-index-family constant, so a live measurement can rescale
+    a family's proxy before cross-family ranking.  1.0 = trust proxy.
+    """
+    return float(calibration) * float(
+        sum(w * metrics[k] for k, w in COST_NS_WEIGHTS.items()))
 
 
 def regress(records: List[Dict], y_key: str = "ns_per_lookup",

@@ -320,24 +320,32 @@ def spec_ladder(index: str, max_configs: Optional[int] = None,
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One evaluated rung: the spec, its build cost metrics, and the
-    `analysis.cost_ns` latency proxy."""
+    """One evaluated rung: the spec, its build cost metrics, the
+    `analysis.cost_ns` latency proxy, and the objective ``score`` the
+    search actually ranks on (== ``cost_ns`` unless a Tuner ``objective``
+    rescored it)."""
 
     spec: IndexSpec
     size_bytes: int
     cost_ns: float
     metrics: Dict[str, Any]
+    score: Optional[float] = None
+
+    def __post_init__(self):
+        if self.score is None:
+            object.__setattr__(self, "score", float(self.cost_ns))
 
 
 @dataclasses.dataclass
 class TuneResult:
     spec: IndexSpec                   # chosen spec, backend resolved
     build: base.IndexBuild            # the chosen build (reusable as-is)
-    frontier: List[Candidate]         # Pareto front over (size, cost)
+    frontier: List[Candidate]         # Pareto front over (size, score)
     evaluated: List[Candidate]        # every rung the search touched
     backend_ns: Dict[str, float]      # measured ns/lookup per backend
     max_bytes: Optional[int]
     target_ns: Optional[float]
+    chosen: Optional[Candidate] = None   # the winning Candidate record
 
 
 @dataclasses.dataclass(frozen=True)
@@ -369,6 +377,15 @@ class Tuner:
     n_queries: int = 2048                     # probe queries when not given
     seed: int = 0
     repeats: int = 2                          # timing repeats per backend
+    #: measured/proxy cost rescale before ranking: None (trust proxy),
+    #: a scalar applied to every family, or {index_name: ratio} from
+    #: `obs.profiler`'s ``cost_model_ratio`` (satellite of DESIGN.md §17)
+    calibration: Any = None
+    #: optional workload-aware objective (duck-typed, see
+    #: `repro.autotune.objective.WorkloadObjective`): ``queries(keys)``
+    #: may supply the probe stream, ``score(spec, metrics, widths)``
+    #: replaces the ranking scalar.  None = classic mean-cost proxy.
+    objective: Any = None
 
     def tune(self, keys: np.ndarray,
              queries: Optional[np.ndarray] = None) -> TuneResult:
@@ -380,8 +397,17 @@ class Tuner:
         for be in self.backends:
             if be not in BACKENDS:
                 raise SpecError(f"unknown backend {be!r}; one of {BACKENDS}")
-        q = self._probe_queries(keys) if queries is None \
-            else np.asarray(queries, dtype=np.uint64)
+        if queries is not None:
+            q = np.asarray(queries, dtype=np.uint64)
+        else:
+            q = None
+            if self.objective is not None and \
+                    hasattr(self.objective, "queries"):
+                got = self.objective.queries(keys)
+                if got is not None:
+                    q = np.asarray(got, dtype=np.uint64)
+            if q is None:
+                q = self._probe_queries(keys)
         q_jnp = jnp.asarray(q)
 
         evaluated: List[Candidate] = []
@@ -397,18 +423,21 @@ class Tuner:
                 widths = np.maximum(
                     np.asarray(hi) - np.asarray(lo) + 1, 1)
                 metrics = analysis.describe(b, widths)
+                cost = analysis.cost_ns(
+                    metrics, calibration=self._calibration_for(name))
+                score = cost if self.objective is None else float(
+                    self.objective.score(sp, metrics, widths))
                 evaluated.append(
                     Candidate(spec=sp, size_bytes=b.size_bytes,
-                              cost_ns=analysis.cost_ns(metrics),
-                              metrics=metrics))
+                              cost_ns=cost, metrics=metrics, score=score))
                 del b   # keep ONE build alive at a time, not every ladder
 
         chosen = self._select(evaluated)
         front = set(base.pareto_front(
-            [(c.size_bytes, c.cost_ns, c.spec.canonical())
+            [(c.size_bytes, c.score, c.spec.canonical())
              for c in evaluated]))
         frontier = [c for c in evaluated
-                    if (c.size_bytes, c.cost_ns, c.spec.canonical()) in front]
+                    if (c.size_bytes, c.score, c.spec.canonical()) in front]
 
         # one extra (deterministic, bit-identical) rebuild of the winner
         # is far cheaper than holding the whole search space's state
@@ -435,7 +464,8 @@ class Tuner:
         chosen_build.meta["spec"] = spec
         return TuneResult(spec=spec, build=chosen_build, frontier=frontier,
                           evaluated=evaluated, backend_ns=backend_ns,
-                          max_bytes=self.max_bytes, target_ns=self.target_ns)
+                          max_bytes=self.max_bytes, target_ns=self.target_ns,
+                          chosen=chosen)
 
     def tune_shards(self, keys: np.ndarray, offsets: Sequence[int],
                     queries: Optional[np.ndarray] = None
@@ -467,6 +497,14 @@ class Tuner:
         return results
 
     # -- internals -------------------------------------------------------
+    def _calibration_for(self, index: str) -> float:
+        """Resolve the measured/proxy rescale for one index family."""
+        if self.calibration is None:
+            return 1.0
+        if isinstance(self.calibration, (int, float)):
+            return float(self.calibration)
+        return float(self.calibration.get(index, 1.0))
+
     def _probe_queries(self, keys: np.ndarray) -> np.ndarray:
         """Mixed present/absent probe stream (seeded; no repro.data
         dependency — the spec layer sits below the dataset layer)."""
@@ -488,7 +526,7 @@ class Tuner:
                 f"(smallest candidate: "
                 f"{min(c.size_bytes for c in cands)} bytes)")
         if self.target_ns is not None:
-            fast = [c for c in feasible if c.cost_ns <= self.target_ns]
+            fast = [c for c in feasible if c.score <= self.target_ns]
             if fast:
-                return min(fast, key=lambda c: (c.size_bytes, c.cost_ns))
-        return min(feasible, key=lambda c: (c.cost_ns, c.size_bytes))
+                return min(fast, key=lambda c: (c.size_bytes, c.score))
+        return min(feasible, key=lambda c: (c.score, c.size_bytes))

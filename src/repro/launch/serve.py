@@ -31,6 +31,16 @@ alert verdict; ``--doctor`` exits nonzero when any alert is firing at
 the end of the run, so a scripted health check is one command:
 
     PYTHONPATH=src python -m repro.launch.serve --mode lookup --doctor
+
+Self-driving tuning (DESIGN.md §17): ``--autotune-daemon`` attaches the
+shadow retuner — alert-triggered off-hot-path retunes under a
+workload-aware objective, oracle-verified before the hot-swap — and
+``--autotune-store DIR`` persists tuned specs across restarts;
+``--doctor`` then also covers the daemon (last trigger/verdict in the
+summary, nonzero exit on a dead retuner thread):
+
+    PYTHONPATH=src python -m repro.launch.serve --mode lookup \\
+        --autotune-daemon --autotune-store /tmp/specs --doctor
 """
 from __future__ import annotations
 
@@ -81,12 +91,17 @@ def run_lookup(args):
     # --spec takes one declarative IndexSpec (JSON) over the index name
     sp = (IndexSpec.from_json(args.spec) if args.spec
           else default_spec(args.index))
+    at_cfg = None
+    if args.autotune_daemon or args.autotune_store:
+        from repro.autotune import AutotuneConfig
+        at_cfg = AutotuneConfig(daemon=args.autotune_daemon,
+                                store_dir=args.autotune_store)
     svc = LookupService(keys, LookupServiceConfig(
         spec=sp, max_batch=args.max_batch,
         deadline_ms=args.deadline_ms, executor=args.executor,
         shards=args.shards, replicas=args.replicas,
         trace=bool(args.trace_out), slo_p99_ms=args.slo_p99_ms,
-        health=not args.no_health))
+        health=not args.no_health, autotune=at_cfg))
     print(f"serving spec: {svc.generation.spec.to_json()} "
           f"(executor={args.executor})")
     topo = getattr(svc.generation, "topology", None)
@@ -107,11 +122,16 @@ def run_lookup(args):
                 svc, args.metrics_jsonl, interval_s=1.0,
                 window_s=args.window_s))
         t0 = time.time()
+        at_dead = False
         with svc:
             futs = [svc.submit(q[i * args.keys_per_request:
                                  (i + 1) * args.keys_per_request])
                     for i in range(args.requests)]
             outs = [f.result(timeout=120.0) for f in futs]
+            # probe the retuner thread BEFORE stop() shuts it down on
+            # purpose: --doctor must distinguish "died" from "stopped"
+            at_dead = (svc.autotune is not None and svc.autotune.cfg.daemon
+                       and not svc.autotune.alive)
         dt = time.time() - t0
 
     got = np.concatenate(outs)
@@ -161,8 +181,21 @@ def run_lookup(args):
         print(f"alert {e['rule']} {e['state']}: {e['key']}={e['value']:.3g} "
               f"({e['op']} {e['threshold']:.3g}) — {e['action']}")
     print("alerts: " + (", ".join(firing) if firing else "none firing"))
+    if svc.autotune is not None:
+        st = svc.autotune.status()
+        lt = st["last_trigger"]
+        daemon_state = ("DEAD" if at_dead
+                        else "up" if st["daemon"] else "off")
+        print(f"autotune: daemon={daemon_state} "
+              f"triggered={st['n_triggered']} swapped={st['n_swapped']} "
+              f"rejected={st['n_rejected']}, "
+              f"last trigger {lt['rule'] if lt else 'none'}, "
+              f"last verdict {st['last_verdict'] or 'none'}")
+        if at_dead:
+            print(f"autotune: retuner thread died: "
+                  f"{st['last_error'] or 'unknown error'}")
     print(f"exact vs lower_bound oracle: {exact}")
-    if args.doctor and (firing or not exact):
+    if args.doctor and (firing or not exact or at_dead):
         raise SystemExit(1)
 
 
@@ -221,10 +254,20 @@ def main():
                     help="disable index-health instrumentation "
                          "(DESIGN.md §15); reads dispatch the plain "
                          "executable with no stats reduction")
+    ap.add_argument("--autotune-daemon", action="store_true",
+                    help="start the shadow-retuner daemon (DESIGN.md "
+                         "§17): workload-drift/error/SLO alerts trigger "
+                         "an off-hot-path retune, verified bit-exact "
+                         "against the oracle before hot-swapping")
+    ap.add_argument("--autotune-store", default=None,
+                    help="spec-artifact store directory: tuned specs "
+                         "persist keyed by (dataset fingerprint, byte "
+                         "budget, workload signature) so a restart on "
+                         "the same workload skips the ladder sweep")
     ap.add_argument("--doctor", action="store_true",
                     help="one-shot health check: exit 1 when any alert "
-                         "is firing (or the oracle check fails) at the "
-                         "end of the run")
+                         "is firing, the oracle check fails, or the "
+                         "autotune daemon thread died during the run")
     args = ap.parse_args()
 
     if args.mode == "lookup":

@@ -187,6 +187,41 @@ class MutableIndex:
     def needs_compaction(self) -> bool:
         return self.delta_count >= self.compact_threshold
 
+    # -- autotune apply --------------------------------------------------
+    def republish(self, spec, build=None) -> Optional[Generation]:
+        """Hot-swap the base generation to a new spec WITHOUT folding
+        the delta — the autotune retuner's apply path (DESIGN.md §17).
+
+        The base key set is unchanged, so the caller's oracle-verified
+        build for it can be published as-is; the delta is carried over
+        verbatim, so inserts admitted at any point survive, and reads
+        stay consistent because the mutable read path pins (generation,
+        delta) PAIRS — the swap is one view-pointer assignment like
+        compaction's.  Returns None if a reset/compaction replaced the
+        base mid-flight (the verified build no longer matches the
+        serving base — the caller must re-tune, not force the swap).
+        """
+        with self._compact_mu:
+            snap = self.view()
+            new_spec = spec_mod.coerce(spec)
+            b = build if build is not None \
+                else spec_mod.build(new_spec, snap.base_np)
+            b.meta["spec"] = new_spec
+            with self._mu:
+                if self._view.generation is not snap.generation:
+                    return None
+                gen = self.registry.publish(b, snap.generation.data,
+                                            name=self.name,
+                                            last_mile=new_spec.last_mile,
+                                            backend=new_spec.backend,
+                                            spec=new_spec)
+                self.spec = new_spec
+                self._view = MutableView(
+                    generation=gen, base_np=snap.base_np,
+                    delta=self._view.delta,
+                    merged_fn=make_merged_fn(gen.plan, new_spec.backend))
+            return gen
+
     # -- compaction ------------------------------------------------------
     def compact(self) -> Optional[Generation]:
         """Fold the current delta into a fresh base generation.

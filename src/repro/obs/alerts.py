@@ -236,6 +236,16 @@ class AlertEngine:
     def has_critical_firing(self) -> bool:
         return bool(self.firing(severity="critical"))
 
+    def firing_since(self) -> Dict[str, float]:
+        """``{rule_name: t_changed}`` for rules currently firing — the
+        hysteresis input consumers like the autotune retuner use to act
+        only on alerts that have been CONTINUOUSLY firing for a dwell
+        period, not on one-sample flaps."""
+        with self._mu:
+            return {name: float(st.t_changed)
+                    for name, st in self._states.items()
+                    if st.state == "firing" and st.t_changed is not None}
+
     def state(self) -> Dict[str, Dict]:
         with self._mu:
             return {name: st.to_dict()

@@ -19,6 +19,8 @@ like.  Surfaces:
                     /health.json (flat health snapshot + per-generation
                     records + alert states), /alerts.json (the full
                     alert-engine document, evaluated at request time),
+                    /autotune.json (the shadow retuner's config,
+                    counters, and decision history when one is attached),
                     /healthz (200/503 from the provider's
                     `health_status` when it has one — stopped service
                     or firing critical alert answers 503)
@@ -174,6 +176,14 @@ class MetricsServer:
                         else:
                             self._send(200, body.encode(),
                                        "application/json")
+                    elif url.path == "/autotune.json":
+                        body = outer.render_autotune()
+                        if body is None:
+                            self._send(404, b"no autotune\n",
+                                       "text/plain")
+                        else:
+                            self._send(200, body.encode(),
+                                       "application/json")
                     elif url.path == "/healthz":
                         status_fn = getattr(outer.provider,
                                             "health_status", None)
@@ -228,6 +238,17 @@ class MetricsServer:
         if alerts is not None:
             doc["alerts"] = {"firing": alerts.firing(),
                              "states": alerts.state()}
+        return json.dumps(doc)
+
+    def render_autotune(self):
+        """The `/autotune.json` document (retuner state machine: config,
+        counters, decision history, artifact-store stats), or None when
+        the provider has no retuner attached."""
+        at = getattr(self.provider, "autotune", None)
+        if at is None:
+            return None
+        doc = at.to_dict()
+        doc["t_unix"] = time.time()
         return json.dumps(doc)
 
     def render_alerts(self, window_s: Optional[float] = None):

@@ -426,6 +426,45 @@ class HealthMonitor:
         snap["health_shards"] = float(len(recs))
         return snap
 
+    def global_traffic_hist(self, window_s: float = 10.0
+                            ) -> Optional[np.ndarray]:
+        """The trailing window's traffic histogram in GLOBAL rank space —
+        the autotune retuner's workload signature / objective input.
+
+        Broadcast: the current generation's window verbatim.  Routed
+        group: each shard's local-rank histogram is re-binned into the
+        global rank axis (shards ordered by shard index, offsets from
+        their key counts) by landing each local bucket's mass at its
+        midpoint rank — exact to within one global bucket, which is
+        finer than the signature quantization consuming it.  None
+        before any publish."""
+        with self._mu:
+            group = self._group
+            latest = self._latest
+        if group is None:
+            return None if latest is None \
+                else latest.traffic_window(window_s)
+        with self._mu:
+            recs = [self._records.get(int(v)) for v in group]
+        recs = sorted([r for r in recs if r is not None],
+                      key=lambda r: (r.shard if r.shard is not None else 0))
+        if not recs:
+            return None
+        k = HEALTH_TRAFFIC_BUCKETS
+        n_total = sum(r.n_keys for r in recs)
+        merged = np.zeros(k, np.int64)
+        off = 0
+        for r in recs:
+            local = r.traffic_window(window_s)
+            edges = (np.arange(k + 1, dtype=np.int64) * r.n_keys
+                     + k - 1) // k
+            mids = np.minimum((edges[:-1] + edges[1:]) // 2,
+                              max(0, r.n_keys - 1))
+            g = np.minimum((off + mids) * k // max(1, n_total), k - 1)
+            np.add.at(merged, g, local)
+            off += r.n_keys
+        return merged
+
     def snapshot(self, window_s: float = 10.0) -> Dict[str, float]:
         """The CURRENT generation's flat health keys (zeros before any
         publish, so alert rules always see their keys).  With a routed

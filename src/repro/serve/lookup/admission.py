@@ -30,6 +30,18 @@ queue with ``kind="scan"`` (``aux`` = scan length) and the mutable
 service admits inserts with ``kind="insert"``, so reads, scans, and
 writes share one admission order — the property the oracle-replay
 invariant is stated against.
+
+Latency classes (DESIGN.md §17 satellite): requests also carry a
+``priority`` class with a per-class deadline budget
+(``class_deadlines={"interactive": 0.002, "batch": 0.05}``).  The
+deadline trigger fires at the EARLIEST ``t_submit + deadline(class)``
+over everything pending, so an interactive request landing behind
+queued batch traffic still bounds its own wait — batch requests merely
+stop forcing eager tiny flushes.  Admission order (and therefore FIFO
+completion) is unchanged: classes shape WHEN a flush happens, never
+reorder requests within it.  Unknown classes fall back to the default
+``deadline_s``, and with ``class_deadlines`` unset the behavior is
+exactly the classic single-deadline batcher.
 """
 from __future__ import annotations
 
@@ -92,6 +104,9 @@ class PendingRequest:
     #: only if the topology object is IDENTICAL to the pinned one — a
     #: hot-swap in between invalidates the tag and dispatch re-routes.
     route: Optional[tuple] = None
+    #: Latency class: picks the deadline budget at admission and the
+    #: per-class latency accounting in `ServiceMetrics`.
+    priority: str = "interactive"
 
 
 class MicroBatcher:
@@ -101,7 +116,8 @@ class MicroBatcher:
                  counter: Optional[MonotonicCounter] = None,
                  max_client_keys: Optional[int] = None,
                  client_rate: Optional[Tuple[float, float]] = None,
-                 recorder=None):
+                 recorder=None,
+                 class_deadlines: Optional[dict] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if max_client_keys is not None and max_client_keys < 1:
@@ -111,8 +127,14 @@ class MicroBatcher:
             if rate <= 0 or burst < 1:
                 raise ValueError("client_rate needs rate > 0 and burst >= 1")
             client_rate = (float(rate), float(burst))
+        if class_deadlines is not None:
+            class_deadlines = {str(k): float(v)
+                               for k, v in class_deadlines.items()}
+            if any(v <= 0 for v in class_deadlines.values()):
+                raise ValueError("class deadlines must be > 0 seconds")
         self.max_batch = int(max_batch)
         self.deadline_s = float(deadline_s)
+        self.class_deadlines = class_deadlines
         self.max_client_keys = max_client_keys
         self.client_rate = client_rate
         #: optional `repro.obs.trace.SpanRecorder`: admission instants
@@ -127,6 +149,11 @@ class MicroBatcher:
         self.router = None
         self._pending: "collections.deque[PendingRequest]" = collections.deque()
         self._n_keys = 0
+        #: earliest (t_submit + class deadline) over pending requests —
+        #: maintained incrementally on submit, recomputed on take; with
+        #: no class map this is always the head's deadline (FIFO submit
+        #: times are monotone), i.e. the classic behavior.
+        self._next_deadline = float("inf")
         self._client_keys: dict = {}
         self._buckets: dict = {}   # client -> (tokens, last_refill_t)
         self._cond = threading.Condition()
@@ -145,8 +172,16 @@ class MicroBatcher:
                 f"{tokens:.1f} tokens (rate={rate}/s, burst={burst:.0f})")
         self._buckets[client] = (tokens - n_keys, now)
 
+    def deadline_for(self, priority: str) -> float:
+        """The flush budget of one latency class (falls back to the
+        default ``deadline_s`` for unknown classes)."""
+        if self.class_deadlines is None:
+            return self.deadline_s
+        return self.class_deadlines.get(priority, self.deadline_s)
+
     def submit(self, keys, kind: str = "read", aux: int = 0,
-               client=None) -> Tuple[int, LookupFuture]:
+               client=None,
+               priority: str = "interactive") -> Tuple[int, LookupFuture]:
         # Always copy: the request may sit queued for deadline_s, and a
         # client reusing its buffer must not mutate keys already admitted.
         keys = np.array(keys, dtype=np.uint64, copy=True).ravel()
@@ -155,7 +190,8 @@ class MicroBatcher:
         rid = self._counter.next()
         fut = LookupFuture(rid, keys.size)
         req = PendingRequest(rid, keys, fut, time.perf_counter(),
-                             kind=kind, aux=int(aux), client=client)
+                             kind=kind, aux=int(aux), client=client,
+                             priority=str(priority))
         router = self.router
         if router is not None and kind != "insert":
             try:
@@ -184,6 +220,9 @@ class MicroBatcher:
                             self._client_keys.get(client, 0) + keys.size)
                 self._pending.append(req)
                 self._n_keys += keys.size
+                self._next_deadline = min(
+                    self._next_deadline,
+                    req.t_submit + self.deadline_for(req.priority))
                 self._cond.notify_all()
         except ClientBacklogFull:
             if self.recorder is not None:
@@ -219,7 +258,7 @@ class MicroBatcher:
             return False
         if self._n_keys >= self.max_batch:
             return True
-        return now - self._pending[0].t_submit >= self.deadline_s
+        return now >= self._next_deadline
 
     def ready(self) -> bool:
         with self._cond:
@@ -241,13 +280,13 @@ class MicroBatcher:
                 now = time.perf_counter()
                 if self._ready_locked(now):
                     return True
-                # sleep until the oldest request's deadline or the caller's
-                # timeout, whichever is sooner; a submit() notify wakes us
-                # early to re-check the size trigger.
+                # sleep until the earliest pending class deadline or the
+                # caller's timeout, whichever is sooner; a submit()
+                # notify wakes us early to re-check the size trigger (or
+                # a tighter deadline a new request just introduced).
                 waits = []
                 if self._pending:
-                    waits.append(self._pending[0].t_submit
-                                 + self.deadline_s - now)
+                    waits.append(self._next_deadline - now)
                 if t_end is not None:
                     if now >= t_end:
                         return False
@@ -281,6 +320,9 @@ class MicroBatcher:
                 out.append(self._pending.popleft())
                 taken += nxt.keys.size
             self._n_keys -= taken
+            self._next_deadline = min(
+                (r.t_submit + self.deadline_for(r.priority)
+                 for r in self._pending), default=float("inf"))
             for r in out:
                 if r.client is not None and r.client in self._client_keys:
                     left = self._client_keys[r.client] - r.keys.size

@@ -513,7 +513,7 @@ class AsyncExecutor:
                     n_requests=len(slot.group),
                     t_oldest_submit=slot.t_submit_oldest,
                     t_start=slot.t_launch, t_end=t_end,
-                    per_request=[(r.t_submit, r.keys.size)
+                    per_request=[(r.t_submit, r.keys.size, r.priority)
                                  for r in slot.group])
         finally:
             with self._inflight_cv:

@@ -68,6 +68,10 @@ class ServiceMetrics:
         self.n_compaction_failures = 0
         self.delta_keys = 0
         self.delta_threshold = 0
+        # -- latency classes (DESIGN.md §17 satellite) -------------------
+        #: per-priority-class request counts/keys + latency histogram,
+        #: populated when per_request observations carry a class tag
+        self._class_stats: Dict[str, Dict] = {}
         # -- routed topology (DESIGN.md §16; zero for broadcast) ---------
         self.n_routed_batches = 0
         self.sum_route_skew = 0.0      # per-batch max/mean shard load
@@ -115,16 +119,36 @@ class ServiceMetrics:
                 })
             return rows
 
+    def per_class(self) -> list:
+        """Per-latency-class rows (requests, keys, p50/p99) — empty
+        until a dispatch path reports 3-tuple per_request observations."""
+        with self._lock:
+            rows = []
+            for name in sorted(self._class_stats):
+                st = self._class_stats[name]
+                rows.append({
+                    "priority": name,
+                    "requests": st["requests"],
+                    "keys": st["keys"],
+                    "mean_request_ms": st["latency"].mean * 1e3,
+                    "p50_request_ms": st["latency"].quantile(0.50) * 1e3,
+                    "p99_request_ms": st["latency"].quantile(0.99) * 1e3,
+                })
+            return rows
+
     def observe_batch(self, *, n_keys: int, padded: int, n_requests: int,
                       t_oldest_submit: float, t_start: float,
                       t_end: float,
-                      per_request: Optional[Sequence[Tuple[float, int]]] = None
+                      per_request: Optional[Sequence[Tuple]] = None
                       ) -> None:
         """One completed dispatch.  ``per_request`` carries the batch's
-        ``(t_submit, n_keys)`` per request: request latency is then
-        recorded per request (exactly what the trace's request spans
-        hold, so trace-derived and histogram p99 reconcile) instead of
-        once per batch at the oldest submit."""
+        ``(t_submit, n_keys)`` — or ``(t_submit, n_keys, priority)`` —
+        per request: request latency is then recorded per request
+        (exactly what the trace's request spans hold, so trace-derived
+        and histogram p99 reconcile) instead of once per batch at the
+        oldest submit.  A 3-tuple's latency class additionally lands in
+        the per-class counters/histograms (`snapshot()`'s ``class_*``
+        keys)."""
         with self._lock:
             self.n_batches += 1
             self.n_keys += n_keys
@@ -133,9 +157,17 @@ class ServiceMetrics:
             self.batch_latency.record(t_end - t_start)
             self.queue_latency.record(t_start - t_oldest_submit)
             if per_request:
-                for t_submit, nk in per_request:
+                for t_submit, nk, *rest in per_request:
                     self.request_latency.record(t_end - t_submit)
                     self.windows.record(t_end - t_submit, units=nk, t=t_end)
+                    if rest:
+                        st = self._class_stats.setdefault(
+                            str(rest[0]),
+                            {"requests": 0, "keys": 0,
+                             "latency": LatencyHistogram()})
+                        st["requests"] += 1
+                        st["keys"] += nk
+                        st["latency"].record(t_end - t_submit)
             else:
                 self.request_latency.record(t_end - t_oldest_submit)
                 self.windows.record(t_end - t_oldest_submit, units=n_keys,
@@ -210,7 +242,7 @@ class ServiceMetrics:
                       if self.t_first is not None
                       and self.t_last is not None
                       and self.t_last > self.t_first else 0.0)
-            return {
+            out = {
                 "batches": self.n_batches,
                 "requests": self.n_requests,
                 "lookups": self.n_keys,
@@ -258,3 +290,11 @@ class ServiceMetrics:
                 "route_max_skew": self.max_route_skew,
                 "route_shards": len(self._shard_stats),
             }
+            # flat per-class keys ride the same namespace the alert
+            # rules and exporters already consume
+            for name, st in self._class_stats.items():
+                out[f"class_{name}_requests"] = st["requests"]
+                out[f"class_{name}_keys"] = st["keys"]
+                out[f"class_{name}_p99_request_ms"] = (
+                    st["latency"].quantile(0.99) * 1e3)
+            return out

@@ -223,6 +223,27 @@ class IndexRegistry:
             cb(name, gen)
         return gen
 
+    def publish_prebuilt(self, gen: Generation,
+                         name: str = DEFAULT_NAME) -> Generation:
+        """Swap in a Generation made earlier with `make_generation` —
+        the autotune retuner's path (DESIGN.md §17): the candidate is
+        compiled and oracle-VERIFIED off the hot path first, and the
+        very object that passed verification is what goes live
+        (publish-after-verify, never rebuild-after-verify).  Same
+        health/trace/subscriber fan-out as `publish`."""
+        with self._lock:
+            self._current[name] = gen
+            subscribers = list(self._subscribers)
+        if self.health is not None:
+            self.health.on_publish(gen)
+        if self.recorder is not None:
+            self.recorder.instant("publish", cat="lifecycle", reg_name=name,
+                                  version=gen.version, index=gen.plan.name,
+                                  n_keys=gen.n_keys)
+        for cb in subscribers:
+            cb(name, gen)
+        return gen
+
     def make_generation(self, build: base.IndexBuild, data,
                         last_mile: Optional[str] = None,
                         backend: str = "jnp",

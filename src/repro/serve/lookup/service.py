@@ -75,6 +75,12 @@ class LookupServiceConfig:
     backend: str = "jnp"               # LookupPlan backend ("jnp" | "pallas")
     max_batch: int = 4096              # keys per dispatch (flush trigger)
     deadline_ms: float = 2.0           # oldest-request flush deadline
+    #: Per-latency-class flush budgets in ms (DESIGN.md §17 satellite),
+    #: e.g. ``{"interactive": 1.0, "batch": 20.0}``: the deadline
+    #: trigger fires at the earliest pending (submit + class budget);
+    #: unknown classes fall back to ``deadline_ms``.  None = single
+    #: deadline for everything (classic behavior).
+    class_deadline_ms: Optional[Dict[str, float]] = None
     pad_quantum: int = PAD_QUANTUM
     max_client_keys: Optional[int] = None   # per-client pending-key cap
     client_rate: Optional[tuple] = None     # per-client (rate keys/s, burst)
@@ -137,6 +143,13 @@ class LookupServiceConfig:
     #: memory).  None -> auto: on for non-CPU backends, off on CPU where
     #: donation is a no-op with a warning.
     donate_queries: Optional[bool] = None
+    #: Self-driving tuning (DESIGN.md §17): an
+    #: `repro.autotune.AutotuneConfig` attaches a `ShadowRetuner` to
+    #: this service — alert-triggered workload-aware retunes, oracle-
+    #: verified hot-swaps, `/autotune.json` surface.  With
+    #: ``autotune.daemon`` the retuner thread starts/stops with the
+    #: service; otherwise drive it via ``service.autotune.poll_once()``.
+    autotune: Optional[Any] = None
 
     def resolved_spec(self) -> spec_mod.IndexSpec:
         """The validated `IndexSpec` every build of this service uses."""
@@ -190,7 +203,11 @@ class LookupService:
             counter=counter if counter is not None else MonotonicCounter(),
             max_client_keys=self.cfg.max_client_keys,
             client_rate=self.cfg.client_rate,
-            recorder=self.recorder)
+            recorder=self.recorder,
+            class_deadlines=(
+                {k: v / 1e3
+                 for k, v in self.cfg.class_deadline_ms.items()}
+                if self.cfg.class_deadline_ms is not None else None))
         self._dispatch_lock = threading.Lock()   # one batch at a time
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -214,6 +231,13 @@ class LookupService:
         # swap_keys) evict stale executables too
         self.registry.subscribe(self._on_publish)
         self.swap_keys(keys)
+        #: §17 shadow retuner, or None — constructed AFTER the first
+        #: publish so its trigger polls always see a live generation
+        if self.cfg.autotune is not None:
+            from repro.autotune import ShadowRetuner
+            self.autotune = ShadowRetuner(self, self.cfg.autotune)
+        else:
+            self.autotune = None
 
     # -- index lifecycle -------------------------------------------------
     def _resolve_topology(self, keys) -> Optional[ShardTopology]:
@@ -248,14 +272,19 @@ class LookupService:
         return self.registry.current()
 
     # -- client surface --------------------------------------------------
-    def submit(self, keys, client=None) -> LookupFuture:
+    def submit(self, keys, client=None,
+               priority: str = "interactive") -> LookupFuture:
         """Admit one request; never blocks.  Completion needs a flusher:
         either the background thread (`start()`/`with svc:`) or explicit
         `flush()`/`drain()` calls — a future submitted with neither
         stays pending until one of them runs.  ``client`` is an optional
         fairness id: with `max_client_keys` configured, an over-backlog
-        client's submit raises `ClientBacklogFull` instead of queueing."""
-        _, fut = self.batcher.submit(keys, client=client)
+        client's submit raises `ClientBacklogFull` instead of queueing.
+        ``priority`` is the latency class: it selects the flush budget
+        (``cfg.class_deadline_ms``) and the per-class latency row in
+        `ServiceMetrics`."""
+        _, fut = self.batcher.submit(keys, client=client,
+                                     priority=priority)
         return fut
 
     def scan(self, keys, length: int, client=None) -> LookupFuture:
@@ -472,7 +501,8 @@ class LookupService:
             n_requests=len(group),
             t_oldest_submit=group[0].t_submit,
             t_start=t0, t_end=t1,
-            per_request=[(r.t_submit, r.keys.size) for r in group])
+            per_request=[(r.t_submit, r.keys.size, r.priority)
+                         for r in group])
 
     def _dispatch_reads(self, batch, lookup_fn, version: int = -1) -> None:
         self._complete_run(batch, lambda: lookup_fn, version=version,
@@ -560,6 +590,15 @@ class LookupService:
             return self.exec_cache.warmup(
                 ctx, buckets, self.dispatcher,
                 scan_lengths=self.cfg.warm_scan_lengths)
+
+    def warm_wait(self, timeout: Optional[float] = None) -> None:
+        """Block until the background re-warm kicked off by the last
+        hot-swap publish finishes (no-op when none is in flight) — so a
+        caller that just swapped can measure steady-state serving
+        without racing the warm thread's compiles for CPU."""
+        w = self._warm_thread
+        if w is not None and w.is_alive():
+            w.join(timeout)
 
     def _warm_routed(self, rctx: RoutedContext) -> int:
         """Prime every (shard, replica) lane's executables on that
@@ -682,6 +721,12 @@ class LookupService:
             snap.get("mean_inflight_slots", 0.0) / self.cfg.slots
             if self._async is not None and self.cfg.slots else 0.0)
         snap["serving"] = 1.0 if self._thread is not None else 0.0
+        if self.autotune is not None:
+            st = self.autotune.status()
+            snap["autotune_alive"] = 1.0 if st.get("alive") else 0.0
+            snap["autotune_triggered"] = float(st.get("n_triggered", 0))
+            snap["autotune_swapped"] = float(st.get("n_swapped", 0))
+            snap["autotune_rejected"] = float(st.get("n_rejected", 0))
         return snap
 
     def check_alerts(self, window_s: float = 10.0) -> list:
@@ -731,6 +776,7 @@ class LookupService:
             # dispatch then never traces or compiles (§13 warm-up)
             self.warm_now()
             self._thread = self._async.start()
+            self._start_autotune()
             return self
         self._stop.clear()
 
@@ -744,7 +790,16 @@ class LookupService:
         self._thread = threading.Thread(
             target=_loop, name="lookup-flusher", daemon=True)
         self._thread.start()
+        self._start_autotune()
         return self
+
+    def _start_autotune(self) -> None:
+        """Start the shadow-retuner daemon alongside the flusher (only
+        when the config asked for one — `poll_once` stays available for
+        explicit/test-driven retunes either way)."""
+        at = self.autotune
+        if at is not None and at.cfg.daemon:
+            at.start()
 
     def stop(self) -> None:
         """Stop the background flusher, completing everything admitted so
@@ -752,6 +807,8 @@ class LookupService:
         (submit + flush/drain), or via a later start()."""
         if self._thread is None:
             return
+        if self.autotune is not None:
+            self.autotune.stop()   # no retunes against a draining service
         if self._async is not None:
             self._async.stop()
             self._thread = None
